@@ -1,0 +1,76 @@
+"""Paper Fig. 8 — Test Case 1: ping-pong goodput over two SPSC channels,
+comparing the two fabric personalities of the localsim backend:
+
+* rdma        — LPF/zero-engine analog (no per-message handshake)
+* rendezvous  — MPI one-sided analog (request/ack round-trip per transfer)
+
+The paper's absolute numbers come from Infiniband hardware; here the
+*structure* is reproduced: the same HiCR program on two comm backends, the
+low-handshake one winning at small message sizes and both converging for
+large messages (handshake cost amortized). See EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.backends.localsim import LocalSimWorld
+from repro.frontends.channels import SPSCConsumer, SPSCProducer
+
+
+def _pingpong(mgrs, rank, *, msg_size: int, rounds: int):
+    cm, mm = mgrs.communication_manager, mgrs.memory_manager
+    if rank == 0:
+        ping = SPSCProducer(cm, mm, tag=1, capacity=1, msg_size=msg_size)
+        pong = SPSCConsumer(cm, mm, tag=2, capacity=1, msg_size=msg_size)
+        payload = bytes(msg_size)
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            ping.push(payload)
+            pong.pop(timeout=60)
+        dt = time.perf_counter() - t0
+        # goodput: payload bytes moved per second, both directions
+        return 2.0 * msg_size * rounds / dt
+    ping = SPSCConsumer(cm, mm, tag=1, capacity=1, msg_size=msg_size)
+    pong = SPSCProducer(cm, mm, tag=2, capacity=1, msg_size=msg_size)
+    for _ in range(rounds):
+        pong.push(ping.pop(timeout=60))
+    return None
+
+
+def measure(mode: str, msg_size: int, *, rounds: int) -> float:
+    w = LocalSimWorld(2, mode=mode)
+    try:
+        results = w.launch(
+            lambda mgrs, rank: _pingpong(mgrs, rank, msg_size=msg_size, rounds=rounds),
+            timeout=300.0,
+        )
+        return results[0]
+    finally:
+        w.shutdown()
+
+
+def run(csv_writer=None) -> list[dict]:
+    sizes = [1, 64, 1024, 16 * 1024, 256 * 1024, 4 * 1024 * 1024]
+    rows = []
+    for size in sizes:
+        rounds = max(4, min(200, (1 << 22) // max(size, 256)))
+        g_rdma = measure("rdma", size, rounds=rounds)
+        g_rdv = measure("rendezvous", size, rounds=rounds)
+        row = {
+            "bench": "channels_pingpong",
+            "msg_bytes": size,
+            "goodput_rdma_MBps": round(g_rdma / 1e6, 3),
+            "goodput_rendezvous_MBps": round(g_rdv / 1e6, 3),
+            "rdma_advantage": round(g_rdma / g_rdv, 2),
+        }
+        rows.append(row)
+        print(f"[channels] {size:>9}B  rdma={row['goodput_rdma_MBps']:>10.3f} MB/s  "
+              f"rendezvous={row['goodput_rendezvous_MBps']:>10.3f} MB/s  "
+              f"ratio={row['rdma_advantage']}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Table 2 — Test Case 2: heterogeneous inference.
+
+The same HiCR inference program over three device stacks (host-numpy, XLA
+jit, Pallas interpret); reports per-backend accuracy and the img-0 top score,
+which must agree to device float precision. (The paper's rows are CPU/GPU/NPU
+hardware; ours are the three kernel paths available in this container.)
+"""
+from __future__ import annotations
+
+from repro.apps import mlp_inference
+from repro.backends import hostcpu, jaxdev
+
+
+def run(csv_writer=None) -> list[dict]:
+    weights = mlp_inference.train_weights()
+    host_topo = hostcpu.HostTopologyManager().query_topology()
+    jax_topo = jaxdev.JaxTopologyManager().query_topology()
+    combos = [
+        ("host-cpu", hostcpu.HostComputeManager(), host_topo.all_compute_resources()[0], "numpy"),
+        ("xla-jit", jaxdev.JaxComputeManager(), jax_topo.all_compute_resources()[0], "jax"),
+        ("pallas-interp", jaxdev.JaxComputeManager(), jax_topo.all_compute_resources()[0], "pallas"),
+    ]
+    rows = []
+    for device, cm, res, kernel in combos:
+        out = mlp_inference.run_inference(cm, res, kernel=kernel, weights=weights, n_test=2000)
+        row = {
+            "bench": "heterogeneous_inference",
+            "device": device,
+            "backend": kernel,
+            "accuracy": round(out.accuracy, 4),
+            "img0_score": f"{out.img0_score:.9f}",
+            "img0_class": out.img0_class,
+        }
+        rows.append(row)
+        print(f"[inference] {device:<14} backend={kernel:<7} "
+              f"accuracy={row['accuracy']:.2%} img0={row['img0_score']}")
+    accs = {r["accuracy"] for r in rows}
+    assert len(accs) == 1, f"Table-2 consistency violated: {accs}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Figs. 10-11 — Test Case 4: coarse-grained tasking + scaling.
+
+3-D Jacobi, 13-point stencil. Single-instance tasked run (Fig. 10 analog)
+plus strong and weak scaling over localsim instances with one-sided halo
+exchange (Fig. 11 analog). Grid sizes are scaled down from the paper's 704³
+to CI-friendly sizes; the measured quantity (GFlop/s and scaling shape) is
+the same.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps import jacobi
+
+
+def run(csv_writer=None, *, base: int = 48, iters: int = 10) -> list[dict]:
+    rows = []
+
+    # -- Fig. 10 analog: single instance, tasked blocks ---------------------
+    g = jacobi.init_grid((base + 2 * jacobi.HALO,) * 3)
+    ref = jacobi.jacobi_reference(g, iters)
+    for tg in [(1, 1, 1), (1, 2, 2), (2, 2, 2)]:
+        out = jacobi.run_local(g, iters, thread_grid=tg)
+        np.testing.assert_allclose(out["grid"], ref, rtol=1e-5, atol=1e-5)
+        row = {
+            "bench": "jacobi_local",
+            "grid": f"{base}^3",
+            "thread_grid": "x".join(map(str, tg)),
+            "seconds": round(out["seconds"], 4),
+            "gflops": round(out["gflops"], 3),
+        }
+        rows.append(row)
+        print(f"[jacobi-local] {base}^3 threads={row['thread_grid']:<6} "
+              f"{out['seconds']:.3f}s {out['gflops']:.2f} GF/s")
+
+    # -- Fig. 11 analog: strong scaling ------------------------------------
+    for p in (1, 2, 4):
+        out = jacobi.run_distributed(g, iters, instances=p)
+        np.testing.assert_allclose(out["grid"], ref, rtol=1e-5, atol=1e-5)
+        row = {
+            "bench": "jacobi_strong",
+            "grid": f"{base}^3",
+            "instances": p,
+            "seconds": round(out["seconds"], 4),
+            "gflops": round(out["gflops"], 3),
+        }
+        rows.append(row)
+        print(f"[jacobi-strong] {base}^3 p={p} {out['seconds']:.3f}s {out['gflops']:.2f} GF/s")
+
+    # -- Fig. 11 analog: weak scaling (grow x with p; paper grew 704->1056) -
+    for p in (1, 2, 4):
+        nx = base * p
+        gw = jacobi.init_grid((nx + 2 * jacobi.HALO, base + 2 * jacobi.HALO, base + 2 * jacobi.HALO))
+        out = jacobi.run_distributed(gw, iters, instances=p)
+        row = {
+            "bench": "jacobi_weak",
+            "grid": f"{nx}x{base}x{base}",
+            "instances": p,
+            "seconds": round(out["seconds"], 4),
+            "gflops": round(out["gflops"], 3),
+        }
+        rows.append(row)
+        print(f"[jacobi-weak] {row['grid']} p={p} {out['seconds']:.3f}s {out['gflops']:.2f} GF/s")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

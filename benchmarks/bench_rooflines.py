@@ -1,0 +1,78 @@
+"""§Roofline source: summarizes the dry-run JSON records produced by
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json experiments/<dir>
+
+into the per-(arch × shape × mesh) roofline table (three terms in seconds,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs utilization ratio). When records
+are missing it falls back to compiling a handful of representative cells on
+a small in-process mesh (subprocess; keeps the 512-device flag out of the
+bench process).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+RECORD_DIRS = (
+    "experiments/dryrun_optimized_single",
+    "experiments/dryrun_baseline_single",
+)
+_FALLBACK_CELLS = [
+    ("gemma3-1b", "train_4k"),
+    ("xlstm-125m", "prefill_32k"),
+    ("grok-1-314b", "decode_32k"),
+]
+
+
+def _rows_from_dir(d: str) -> list[dict]:
+    rows = []
+    for fname in sorted(os.listdir(d)):
+        if not fname.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(d, fname)))
+        roof = rec.get("roofline_calibrated") or rec["roofline"]
+        mf = rec.get("model_flops_global") or 0.0
+        hlo_global = roof["flops_per_device"] * rec["chips"]
+        rows.append({
+            "bench": "roofline",
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "mesh": "x".join(str(v) for v in rec["mesh"].values()),
+            "compute_ms": round(roof["compute_s"] * 1e3, 3),
+            "memory_ms": round(roof["memory_s"] * 1e3, 3),
+            "collective_ms": round(roof["collective_s"] * 1e3, 3),
+            "dominant": roof["dominant"],
+            "model_vs_hlo_flops": round(mf / hlo_global, 4) if hlo_global else None,
+        })
+    return rows
+
+
+def run(csv_writer=None) -> list[dict]:
+    for d in RECORD_DIRS:
+        if os.path.isdir(d) and os.listdir(d):
+            rows = _rows_from_dir(d)
+            break
+    else:
+        # fallback: compile a few representative cells at 4x4
+        tmp = "experiments/dryrun_bench_fallback"
+        env = dict(os.environ, PYTHONPATH="src")
+        for arch, shape in _FALLBACK_CELLS:
+            subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                 "--shape", shape, "--mesh", "4x4", "--json", tmp],
+                check=True, env=env, timeout=900,
+            )
+        rows = _rows_from_dir(tmp)
+
+    for r in rows:
+        print(f"[roofline] {r['arch']:<16} {r['shape']:<12} mesh={r['mesh']:<9} "
+              f"C={r['compute_ms']:>9.2f}ms M={r['memory_ms']:>10.2f}ms "
+              f"X={r['collective_ms']:>8.2f}ms dom={r['dominant']:<10} "
+              f"useful={r['model_vs_hlo_flops']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig. 9 — Test Case 3: fine-grained tasking overhead.
+
+Computes F(n) as 2·F(n+1)−1 recursive tasks on the Tasking frontend with
+(a) suspendable coroutine tasks (Pthreads+Boost analog) and (b) thread-run
+task bodies (nOS-V analog), reporting tasks/second — the context-switch
+overhead measurement. Default n keeps CI fast; pass n=24 for the paper's
+150 049-task configuration.
+"""
+from __future__ import annotations
+
+from repro.apps import fibonacci
+
+
+def run(csv_writer=None, *, n: int = 18, workers: int = 8) -> list[dict]:
+    rows = []
+    for manager in ("coroutine", "threads"):
+        out = fibonacci.run_fibonacci(n, workers=workers, task_manager=manager)
+        assert out["value"] == fibonacci.fib_reference(n)
+        assert out["tasks"] == fibonacci.expected_tasks(n)
+        row = {
+            "bench": "tasking_fibonacci",
+            "n": n,
+            "task_manager": manager,
+            "tasks": out["tasks"],
+            "seconds": round(out["seconds"], 4),
+            "tasks_per_s": round(out["tasks"] / out["seconds"], 1),
+            "workers": workers,
+        }
+        rows.append(row)
+        print(f"[fib] F({n})={out['value']} manager={manager:<10} "
+              f"{out['tasks']} tasks in {out['seconds']:.3f}s "
+              f"({row['tasks_per_s']:.0f} tasks/s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(n=20)

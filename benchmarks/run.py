@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/figure:
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run channels   # one
+
+Paper artifact map:
+    bench_channels     -> Fig. 8   (ping-pong goodput, 2 comm backends)
+    bench_inference    -> Table 2  (heterogeneous inference consistency)
+    bench_tasking_fib  -> Fig. 9   (fine-grained tasking overhead)
+    bench_jacobi       -> Figs. 10/11 (coarse tasking + strong/weak scaling)
+    bench_rooflines    -> EXPERIMENTS.md §Roofline source table
+Writes benchmarks/results.csv.
+"""
+from __future__ import annotations
+
+import csv
+import sys
+import time
+
+from . import bench_channels, bench_inference, bench_jacobi, bench_rooflines, bench_tasking_fib
+
+ALL = {
+    "channels": bench_channels.run,
+    "inference": bench_inference.run,
+    "tasking_fib": bench_tasking_fib.run,
+    "jacobi": bench_jacobi.run,
+    "rooflines": bench_rooflines.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    all_rows: list[dict] = []
+    for name in names:
+        print(f"=== bench: {name} ===")
+        t0 = time.monotonic()
+        rows = ALL[name]()
+        print(f"=== {name}: {len(rows)} rows in {time.monotonic() - t0:.1f}s ===\n")
+        all_rows.extend(rows)
+
+    fields: list[str] = []
+    for row in all_rows:
+        for k in row:
+            if k not in fields:
+                fields.append(k)
+    with open("benchmarks/results.csv", "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=fields)
+        writer.writeheader()
+        writer.writerows(all_rows)
+    print(f"wrote benchmarks/results.csv ({len(all_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

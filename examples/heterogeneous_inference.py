@@ -1,0 +1,25 @@
+"""Heterogeneous inference (paper Test Case 2, Table 2).
+
+One HiCR inference program; three device stacks selected purely by backend
+choice (host-numpy / XLA-jit / Pallas). Accuracy must agree exactly; the
+img-0 score to float precision.
+
+    PYTHONPATH=src python examples/heterogeneous_inference.py
+"""
+from repro.apps import mlp_inference
+from repro.backends import hostcpu, jaxdev
+
+weights = mlp_inference.train_weights()
+host_topo = hostcpu.HostTopologyManager().query_topology()
+jax_topo = jaxdev.JaxTopologyManager().query_topology()
+
+rows = [
+    ("host-cpu ", hostcpu.HostComputeManager(), host_topo.all_compute_resources()[0], "numpy"),
+    ("xla-jit  ", jaxdev.JaxComputeManager(), jax_topo.all_compute_resources()[0], "jax"),
+    ("pallas   ", jaxdev.JaxComputeManager(), jax_topo.all_compute_resources()[0], "pallas"),
+]
+
+print(f"{'device':<10} {'backend':<8} {'accuracy':<10} img-0 score")
+for device, cm, res, kernel in rows:
+    out = mlp_inference.run_inference(cm, res, kernel=kernel, weights=weights)
+    print(f"{device:<10} {kernel:<8} {out.accuracy:<10.2%} {out.img0_score:.9f}")

@@ -1,0 +1,9 @@
+"""HiCR-based applications reproducing the paper's test cases (§5).
+
+Each app is written exclusively against the abstract HiCR manager API so the
+same program runs on any backend combination — the paper's thesis. Used by
+examples/ (runnable drivers), benchmarks/ (paper figures) and tests/.
+"""
+from . import fibonacci, jacobi, mlp_inference  # noqa: F401
+
+__all__ = ["fibonacci", "jacobi", "mlp_inference"]

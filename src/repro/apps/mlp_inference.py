@@ -1,0 +1,167 @@
+"""Test Case 2 (paper §5.2): heterogeneous inference.
+
+A 2-layer MLP digit classifier runs the SAME HiCR program on different
+compute backends; only the execution-unit kernel implementation changes:
+
+* ``numpy``  — host BLAS matmuls (the paper's Pthreads+OpenBLAS variant)
+* ``jax``    — jitted XLA kernels (the paper's ACL/NPU variant)
+* ``pallas`` — the fused_linear Pallas kernel in interpret mode (the paper's
+  naive OpenCL variant: same math, different codegen path)
+
+The dataset is a deterministic synthetic "digits" set (10 Gaussian blobs in
+a 64-dim pixel space — no external downloads); the weights are trained once
+in plain numpy at module scope so every backend consumes identical weights,
+mirroring the paper's "saved its weights for later use during inference".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping
+
+import numpy as np
+
+from repro.core.managers import ComputeManager
+from repro.core.stateless import ComputeResource
+
+IN_DIM, HID, N_CLASSES = 64, 32, 10
+
+
+_PROTO_SEED = 1234  # class prototypes are part of the task definition
+
+
+def make_dataset(n: int = 2000, *, seed: int = 7, noise: float = 2.4):
+    """10 fixed class prototypes + per-split Gaussian noise.
+    Returns (x (n,64), y (n,))."""
+    protos = np.random.default_rng(_PROTO_SEED).normal(
+        size=(N_CLASSES, IN_DIM)).astype(np.float32)
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, N_CLASSES, size=n)
+    x = protos[y] + noise * rng.normal(size=(n, IN_DIM)).astype(np.float32)
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def train_weights(*, seed: int = 3, steps: int = 300, lr: float = 0.05) -> Mapping[str, np.ndarray]:
+    """Tiny numpy SGD training pass (done once, offline, like the paper)."""
+    x, y = make_dataset(4000, seed=11)
+    rng = np.random.default_rng(seed)
+    w1 = (rng.normal(size=(IN_DIM, HID)) / np.sqrt(IN_DIM)).astype(np.float32)
+    b1 = np.zeros(HID, np.float32)
+    w2 = (rng.normal(size=(HID, N_CLASSES)) / np.sqrt(HID)).astype(np.float32)
+    b2 = np.zeros(N_CLASSES, np.float32)
+    n = x.shape[0]
+    for step in range(steps):
+        idx = rng.integers(0, n, size=128)
+        xb, yb = x[idx], y[idx]
+        h = np.maximum(xb @ w1 + b1, 0.0)
+        logits = h @ w2 + b2
+        p = np.exp(logits - logits.max(axis=1, keepdims=True))
+        p /= p.sum(axis=1, keepdims=True)
+        g = p
+        g[np.arange(len(yb)), yb] -= 1.0
+        g /= len(yb)
+        gw2 = h.T @ g
+        gb2 = g.sum(0)
+        gh = (g @ w2.T) * (h > 0)
+        gw1 = xb.T @ gh
+        gb1 = gh.sum(0)
+        w1 -= lr * gw1; b1 -= lr * gb1; w2 -= lr * gw2; b2 -= lr * gb2
+    return {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+
+
+# ---------------------------------------------------------------------------
+# per-backend kernels (the paper: OpenBLAS / ACL precompiled / naive OpenCL)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_numpy(weights):
+    def run(x):
+        h = np.maximum(x @ weights["w1"] + weights["b1"], 0.0)
+        return h @ weights["w2"] + weights["b2"]
+
+    return run
+
+
+def _kernel_jax(weights):
+    import jax
+    import jax.numpy as jnp
+
+    w = {k: jnp.asarray(v) for k, v in weights.items()}
+
+    @jax.jit
+    def fwd(x):
+        h = jnp.maximum(x @ w["w1"] + w["b1"], 0.0)
+        return h @ w["w2"] + w["b2"]
+
+    return lambda x: np.asarray(fwd(jnp.asarray(x)))
+
+
+def _kernel_pallas(weights):
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_linear import fused_linear
+
+    w = {k: jnp.asarray(v) for k, v in weights.items()}
+
+    def fwd(x):
+        # pad batch to the 8-row tile the kernel's BlockSpec expects
+        n = x.shape[0]
+        pad = (-n) % 8
+        xp = jnp.asarray(np.pad(x, ((0, pad), (0, 0))))
+        h = fused_linear(xp, w["w1"], w["b1"], act="relu",
+                         block_m=8, block_n=16, block_k=16, interpret=True)
+        out = fused_linear(h, w["w2"], w["b2"], act="none",
+                           block_m=8, block_n=10, block_k=16, interpret=True)
+        return np.asarray(out)[:n]
+
+    return fwd
+
+
+KERNELS: Mapping[str, Callable] = {
+    "numpy": _kernel_numpy,
+    "jax": _kernel_jax,
+    "pallas": _kernel_pallas,
+}
+
+
+@dataclasses.dataclass
+class InferenceResult:
+    backend: str
+    accuracy: float
+    img0_score: float  # highest score for the first test image (paper Table 2)
+    img0_class: int
+
+
+def run_inference(
+    compute_manager: ComputeManager,
+    resource: ComputeResource,
+    *,
+    kernel: str,
+    weights: Mapping[str, np.ndarray],
+    batch_size: int = 256,
+    n_test: int = 2000,
+) -> InferenceResult:
+    """The HiCR program: identical for every backend; only the manager and
+    the kernel implementation differ (paper Fig. 4 pattern)."""
+    x, y = make_dataset(n_test, seed=99)
+    fwd = KERNELS[kernel](weights)
+
+    pu = compute_manager.create_processing_unit(resource)
+    compute_manager.initialize(pu)
+    # kernels are pre-compiled (the paper's "saved kernels" model): the
+    # manager must not re-jit them, so jit=False where supported.
+    unit = compute_manager.create_execution_unit(fwd, name=f"mlp-{kernel}", jit=False)
+
+    preds, img0_score, img0_class = [], None, None
+    for lo in range(0, n_test, batch_size):
+        state = compute_manager.create_execution_state(unit, x[lo : lo + batch_size])
+        compute_manager.execute(pu, state)
+        compute_manager.await_(pu)
+        logits = state.get_result()
+        if lo == 0:
+            img0_score = float(np.max(logits[0]))
+            img0_class = int(np.argmax(logits[0]))
+        preds.append(np.argmax(logits, axis=1))
+    compute_manager.finalize(pu)
+
+    acc = float(np.mean(np.concatenate(preds) == y))
+    return InferenceResult(kernel, acc, img0_score, img0_class)

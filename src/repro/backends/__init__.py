@@ -1,0 +1,74 @@
+"""Built-in HiCR backends (paper §4.2, Table 1).
+
+Importing this package registers every built-in backend with the core
+registry. The capability table mirrors the paper's Table 1:
+
+  backend    | topology | instance | communication | memory | compute
+  -----------+----------+----------+---------------+--------+--------
+  hostcpu    |    X     |          |      X        |   X    |   X      (HWLoc+Pthreads)
+  coroutine  |          |          |               |        |   X      (Boost)
+  jaxdev     |    X     |          |      X        |   X    |   X      (ACL/OpenCL)
+  localsim   |          |    X     |      X        |        |          (MPI/LPF)
+  spmd       |          |    X     |      X        |        |   X      (XLA SPMD)
+  tpu_spec   |    X     |          |               |        |          (spec-sheet)
+"""
+from repro.core.registry import register_backend
+
+from . import coroutine, hostcpu, jaxdev, localsim, spmd, tpu_spec  # noqa: F401
+
+register_backend(
+    "hostcpu",
+    {
+        "topology": hostcpu.HostTopologyManager,
+        "memory": hostcpu.HostMemoryManager,
+        "communication": hostcpu.HostCommunicationManager,
+        "compute": hostcpu.HostComputeManager,
+    },
+    description="HWLoc+Pthreads analog: host cores, host RAM, threaded compute",
+)
+
+register_backend(
+    "coroutine",
+    {"compute": coroutine.CoroutineComputeManager},
+    description="Boost.Context analog: suspendable coroutine execution states",
+)
+
+register_backend(
+    "jaxdev",
+    {
+        "topology": jaxdev.JaxTopologyManager,
+        "memory": jaxdev.JaxMemoryManager,
+        "communication": jaxdev.JaxCommunicationManager,
+        "compute": jaxdev.JaxComputeManager,
+    },
+    description="ACL/OpenCL analog: JAX devices, device buffers, jit execution",
+)
+
+register_backend(
+    "localsim",
+    {
+        # instance/communication managers are per-world; expose factories that
+        # require a world handle.
+        "instance": localsim.LocalSimInstanceManager,
+        "communication": localsim.LocalSimCommunicationManager,
+    },
+    description="MPI/LPF analog: thread instances over an in-process fabric",
+)
+
+register_backend(
+    "spmd",
+    {
+        "instance": spmd.SpmdInstanceManager,
+        "communication": spmd.SpmdCommunicationManager,
+        "compute": spmd.SpmdComputeManager,
+    },
+    description="XLA SPMD: mesh programs, collectives as communication",
+)
+
+register_backend(
+    "tpu_spec",
+    {"topology": tpu_spec.SpecTopologyManager},
+    description="Target-system topology from the v5e spec sheet",
+)
+
+__all__ = ["coroutine", "hostcpu", "jaxdev", "localsim", "spmd", "tpu_spec"]

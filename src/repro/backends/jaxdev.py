@@ -1,0 +1,234 @@
+"""JAX-device backend: the ACL / OpenCL analog (paper §4.2).
+
+Exposes the devices visible to JAX (TPU chips on real hardware, CpuDevice
+here) as HiCR devices; memory slots are device buffers; execution units are
+staged (jit-compiled) functions whose dispatch is asynchronous — matching
+HiCR's requirement that computation is carried out asynchronously with
+blocking/non-blocking completion queries.
+
+Adaptation note (DESIGN.md §2): jax.Arrays are immutable, so "copying into"
+a device slot rebinds the slot's handle to a functionally-updated array; the
+slot object is the mutable cell. VMEM is compiler-managed on TPU and is not
+exposed as an allocatable memory space.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.definitions import (
+    ComputeResourceKind,
+    InvalidMemcpyDirectionError,
+    LifetimeError,
+    MemcpyDirection,
+    MemorySpaceKind,
+    ProcessingUnitStatus,
+)
+from repro.core.managers import (
+    CommunicationManager,
+    ComputeManager,
+    MemoryManager,
+    TopologyManager,
+)
+from repro.core.stateful import ExecutionState, LocalMemorySlot, ProcessingUnit
+from repro.core.stateless import (
+    ComputeResource,
+    Device,
+    ExecutionUnit,
+    MemorySpace,
+    Topology,
+)
+
+_DEFAULT_DEVMEM = 16 << 30  # assume one v5e-chip's worth when stats missing
+
+
+class JaxTopologyManager(TopologyManager):
+    backend_name = "jaxdev"
+
+    def query_topology(self) -> Topology:
+        devices = []
+        for d in jax.local_devices():
+            dev_id = f"jax-{d.platform}-{d.id}"
+            try:
+                stats = d.memory_stats() or {}
+                size = int(stats.get("bytes_limit", _DEFAULT_DEVMEM))
+            except Exception:  # noqa: BLE001 - CPU devices expose no stats
+                size = _DEFAULT_DEVMEM
+            cr = ComputeResource(
+                kind=(
+                    ComputeResourceKind.TPU_TENSORCORE.value
+                    if d.platform == "tpu"
+                    else ComputeResourceKind.CPU_CORE.value
+                ),
+                index=d.id,
+                device_id=dev_id,
+                attributes={"platform": d.platform},
+            )
+            ms = MemorySpace(
+                kind=(
+                    MemorySpaceKind.DEVICE_HBM.value
+                    if d.platform == "tpu"
+                    else MemorySpaceKind.HOST_RAM.value
+                ),
+                index=d.id,
+                device_id=dev_id,
+                size_bytes=size,
+            )
+            devices.append(
+                Device(
+                    device_id=dev_id,
+                    kind=d.platform,
+                    compute_resources=(cr,),
+                    memory_spaces=(ms,),
+                    attributes={"jax_id": d.id},
+                )
+            )
+        return Topology(devices=tuple(devices))
+
+
+def _jax_device_for(space: MemorySpace):
+    jid = int(space.device_id.rsplit("-", 1)[1])
+    for d in jax.local_devices():
+        if d.id == jid:
+            return d
+    raise LookupError(f"no jax device for memory space {space.device_id}")
+
+
+class JaxMemoryManager(MemoryManager):
+    backend_name = "jaxdev"
+
+    def __init__(self):
+        self._spaces = tuple(JaxTopologyManager().query_topology().all_memory_spaces())
+
+    def memory_spaces(self) -> Sequence[MemorySpace]:
+        return self._spaces
+
+    def allocate_local_memory_slot(self, space: MemorySpace, size_bytes: int) -> LocalMemorySlot:
+        self._check_space(space)
+        arr = jax.device_put(jnp.zeros((size_bytes,), dtype=jnp.uint8), _jax_device_for(space))
+        return LocalMemorySlot(space, size_bytes, arr)
+
+    def register_local_memory_slot(self, space: MemorySpace, buffer: Any, size_bytes: int) -> LocalMemorySlot:
+        self._check_space(space)
+        if isinstance(buffer, jax.Array):
+            arr = buffer
+        else:
+            arr = jax.device_put(
+                jnp.asarray(np.frombuffer(buffer, dtype=np.uint8)[:size_bytes]),
+                _jax_device_for(space),
+            )
+        return LocalMemorySlot(space, size_bytes, arr, registered=True)
+
+    def free_local_memory_slot(self, slot: LocalMemorySlot) -> None:
+        slot.check_alive()
+        slot.handle = None
+        slot.freed = True
+
+
+@jax.jit
+def _copy_region(dst: jax.Array, src: jax.Array, dst_off, src_off, size):
+    chunk = jax.lax.dynamic_slice(src, (src_off,), (size,))
+    return jax.lax.dynamic_update_slice(dst, chunk, (dst_off,))
+
+
+class JaxCommunicationManager(CommunicationManager):
+    """L2L device-to-device copies; async (XLA dispatch), fenced by
+    block_until_ready."""
+
+    backend_name = "jaxdev"
+
+    def __init__(self):
+        self._pending: dict[int, list] = {}
+
+    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size, tag: int = 0):
+        if direction != MemcpyDirection.LOCAL_TO_LOCAL:
+            raise InvalidMemcpyDirectionError(
+                "jaxdev communication is intra-instance; use spmd/localsim for global"
+            )
+        dst.check_alive()
+        src.check_alive()
+        if dst_off + size > dst.size_bytes or src_off + size > src.size_bytes:
+            raise ValueError("memcpy out of slot bounds")
+        src_arr = src.handle
+        if not isinstance(src_arr, jax.Array):
+            src_arr = jnp.asarray(np.asarray(src.handle).view(np.uint8).reshape(-1))
+        # Functional update: rebind the destination slot's handle.
+        region = jax.lax.dynamic_slice(src_arr, (src.offset + src_off,), (size,))
+        dst.handle = jax.lax.dynamic_update_slice(dst.handle, region, (dst.offset + dst_off,))
+        self._pending.setdefault(tag, []).append(dst.handle)
+
+    def fence(self, tag: int = 0) -> None:
+        for arr in self._pending.pop(tag, []):
+            jax.block_until_ready(arr)
+
+    def exchange_global_memory_slots(self, tag, local_slots):
+        from repro.core.definitions import UnsupportedOperationError
+
+        raise UnsupportedOperationError("jaxdev is intra-instance; use spmd/localsim")
+
+
+class JaxComputeManager(ComputeManager):
+    """Execution units are staged functions; execution states are in-flight
+    asynchronous dispatches; processing units are initialized devices."""
+
+    backend_name = "jaxdev"
+    supported_formats = ("jax-jit", "python-callable")
+    supports_suspension = False
+
+    def create_execution_unit(self, fn, *, name: str = "anonymous", jit: bool = True, static_argnums=(), **metadata) -> ExecutionUnit:
+        staged = jax.jit(fn, static_argnums=static_argnums) if jit else fn
+        return ExecutionUnit(name=name, format="jax-jit", fn=staged, metadata=metadata)
+
+    def create_processing_unit(self, resource: ComputeResource) -> ProcessingUnit:
+        return ProcessingUnit(resource)
+
+    def create_execution_state(self, unit: ExecutionUnit, *args, **kwargs) -> ExecutionState:
+        self.check_format(unit)
+        return ExecutionState(unit, args, kwargs)
+
+    def initialize(self, pu: ProcessingUnit) -> None:
+        jid = int(pu.compute_resource.device_id.rsplit("-", 1)[1])
+        pu.context = next(d for d in jax.local_devices() if d.id == jid)
+        pu.status = ProcessingUnitStatus.READY
+
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
+        pu.check_ready()
+        if state.is_finished():
+            raise LifetimeError("finished execution states cannot be re-used")
+        state.mark_executing()
+        pu.current_state = state
+        pu.status = ProcessingUnitStatus.EXECUTING
+        try:
+            with jax.default_device(pu.context):
+                # Asynchronous dispatch: returns as soon as XLA enqueues.
+                state.continuation = state.execution_unit.fn(*state.args, **state.kwargs)
+        except BaseException as e:  # noqa: BLE001
+            state.mark_finished(error=e)
+            pu.status = ProcessingUnitStatus.READY
+
+    def is_finished(self, state: ExecutionState) -> bool:
+        """Non-blocking completion query (paper §3.1.5)."""
+        if state.is_finished():
+            return True
+        leaves = jax.tree_util.tree_leaves(state.continuation)
+        if all(getattr(leaf, "is_ready", lambda: True)() for leaf in leaves):
+            state.mark_finished(result=state.continuation)
+            return True
+        return False
+
+    def await_(self, pu: ProcessingUnit) -> None:
+        state = pu.current_state
+        if state is not None and not state.is_finished():
+            try:
+                jax.block_until_ready(state.continuation)
+                state.mark_finished(result=state.continuation)
+            except BaseException as e:  # noqa: BLE001
+                state.mark_finished(error=e)
+        pu.status = ProcessingUnitStatus.READY
+
+    def finalize(self, pu: ProcessingUnit) -> None:
+        pu.status = ProcessingUnitStatus.TERMINATED
+        pu.current_state = None

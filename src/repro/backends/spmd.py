@@ -1,0 +1,209 @@
+"""SPMD backend: HiCR over XLA's single-program multiple-data world.
+
+On TPU pods the "interconnect library" is the XLA compiler: one-sided RDMA
+(the MPI/LPF backends of the paper) becomes compiler-scheduled collectives.
+This backend therefore exposes the HiCR communication semantics at two
+levels (DESIGN.md §9):
+
+* **host level** — `memcpy` = resharding an array between `Sharding`s
+  (device_put), `fence` = draining pending transfers. Local↔Global maps to
+  replicated↔sharded placement changes.
+* **trace level** — the collective helpers used inside `shard_map`-ped
+  execution units (`all_reduce`, `all_gather`, `reduce_scatter`,
+  `ppermute_halo`, `all_to_all`). The model's G2G prohibition holds: every
+  collective is issued by the participating program itself.
+
+The compute manager's execution units are SPMD programs: jitted functions
+with explicit in/out shardings; a processing unit is an initialized mesh
+slice (ComputeResourceKind.MESH_SLICE).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.definitions import (
+    ComputeResourceKind,
+    InvalidMemcpyDirectionError,
+    MemcpyDirection,
+    ProcessingUnitStatus,
+)
+from repro.core.managers import (
+    CommunicationManager,
+    ComputeManager,
+    InstanceManager,
+)
+from repro.core.stateful import ExecutionState, Instance, ProcessingUnit
+from repro.core.stateless import ComputeResource, ExecutionUnit
+
+
+class SpmdInstanceManager(InstanceManager):
+    """Instances = JAX processes (launch-time detection path of §3.1.1).
+
+    Under multi-process JAX (one process per host), `jax.process_count()`
+    enumerates the launch-time instances; process 0 is root. Runtime
+    instance creation requires a cluster control plane and is delegated to
+    deployment tooling (documented, not emulated at this level — the
+    localsim backend models that path).
+    """
+
+    backend_name = "spmd"
+
+    def __init__(self):
+        n = jax.process_count()
+        me = jax.process_index()
+        self._instances = tuple(
+            Instance(f"proc-{i}", is_root=(i == 0)) for i in range(n)
+        )
+        self._current = self._instances[me]
+
+    def get_instances(self) -> Sequence[Instance]:
+        return self._instances
+
+    def get_current_instance(self) -> Instance:
+        return self._current
+
+
+class SpmdCommunicationManager(CommunicationManager):
+    backend_name = "spmd"
+
+    def __init__(self):
+        self._pending: dict[int, list] = {}
+
+    # -- host level -----------------------------------------------------------
+    def reshard(self, array: jax.Array, sharding: jax.sharding.Sharding, *, tag: int = 0) -> jax.Array:
+        """The L2G/G2L analog at runtime level: move data between layouts.
+        Asynchronous; fence(tag) to drain."""
+        out = jax.device_put(array, sharding)
+        self._pending.setdefault(tag, []).append(out)
+        return out
+
+    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size, tag: int = 0):
+        if direction != MemcpyDirection.LOCAL_TO_LOCAL:
+            raise InvalidMemcpyDirectionError(
+                "spmd memcpy between instances is expressed as resharding "
+                "(use .reshard) or trace-level collectives"
+            )
+        src_arr = src.handle
+        region = jax.lax.dynamic_slice(src_arr, (src.offset + src_off,), (size,))
+        dst.handle = jax.lax.dynamic_update_slice(dst.handle, region, (dst.offset + dst_off,))
+        self._pending.setdefault(tag, []).append(dst.handle)
+
+    def fence(self, tag: int = 0) -> None:
+        for arr in self._pending.pop(tag, []):
+            jax.block_until_ready(arr)
+
+    def exchange_global_memory_slots(self, tag, local_slots):
+        from repro.core.definitions import UnsupportedOperationError
+
+        raise UnsupportedOperationError(
+            "spmd global slots are NamedShardings established at trace time"
+        )
+
+    # -- trace level: the collective vocabulary of the model -------------------
+    @staticmethod
+    def all_reduce(x, axis_name: str):
+        return jax.lax.psum(x, axis_name)
+
+    @staticmethod
+    def all_gather(x, axis_name: str, *, axis: int = 0, tiled: bool = True):
+        return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+    @staticmethod
+    def reduce_scatter(x, axis_name: str, *, scatter_dimension: int = 0):
+        return jax.lax.psum_scatter(x, axis_name, scatter_dimension=scatter_dimension, tiled=True)
+
+    @staticmethod
+    def all_to_all(x, axis_name: str, *, split_axis: int, concat_axis: int, tiled: bool = True):
+        return jax.lax.all_to_all(x, axis_name, split_axis=split_axis, concat_axis=concat_axis, tiled=tiled)
+
+    @staticmethod
+    def ppermute_halo(x, axis_name: str, *, shift: int = 1):
+        """Neighbor exchange on a ring (the Jacobi halo pattern)."""
+        n = jax.lax.axis_size(axis_name)
+        perm = [(i, (i + shift) % n) for i in range(n)]
+        return jax.lax.ppermute(x, axis_name, perm)
+
+
+class SpmdComputeManager(ComputeManager):
+    """Execution units are SPMD programs over a mesh; a processing unit is an
+    initialized mesh context; dispatch is asynchronous."""
+
+    backend_name = "spmd"
+    supported_formats = ("jax-spmd", "jax-jit", "python-callable")
+    supports_suspension = False
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None):
+        self.mesh = mesh
+
+    def mesh_compute_resource(self) -> ComputeResource:
+        assert self.mesh is not None
+        return ComputeResource(
+            kind=ComputeResourceKind.MESH_SLICE.value,
+            index=0,
+            device_id=f"mesh-{'x'.join(map(str, self.mesh.devices.shape))}",
+            attributes={"axis_names": tuple(self.mesh.axis_names)},
+        )
+
+    def create_execution_unit(
+        self,
+        fn,
+        *,
+        name: str = "spmd-program",
+        in_shardings=None,
+        out_shardings=None,
+        static_argnums=(),
+        donate_argnums=(),
+        **metadata,
+    ) -> ExecutionUnit:
+        staged = jax.jit(
+            fn,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
+            static_argnums=static_argnums,
+            donate_argnums=donate_argnums,
+        )
+        return ExecutionUnit(name=name, format="jax-spmd", fn=staged, metadata=metadata)
+
+    def create_processing_unit(self, resource: ComputeResource) -> ProcessingUnit:
+        return ProcessingUnit(resource)
+
+    def create_execution_state(self, unit: ExecutionUnit, *args, **kwargs) -> ExecutionState:
+        self.check_format(unit)
+        return ExecutionState(unit, args, kwargs)
+
+    def initialize(self, pu: ProcessingUnit) -> None:
+        pu.context = self.mesh
+        pu.status = ProcessingUnitStatus.READY
+
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
+        pu.check_ready()
+        state.mark_executing()
+        pu.current_state = state
+        pu.status = ProcessingUnitStatus.EXECUTING
+        try:
+            if self.mesh is not None:
+                with self.mesh:
+                    state.continuation = state.execution_unit.fn(*state.args, **state.kwargs)
+            else:
+                state.continuation = state.execution_unit.fn(*state.args, **state.kwargs)
+        except BaseException as e:  # noqa: BLE001
+            state.mark_finished(error=e)
+            pu.status = ProcessingUnitStatus.READY
+
+    def await_(self, pu: ProcessingUnit) -> None:
+        state = pu.current_state
+        if state is not None and not state.is_finished():
+            try:
+                jax.block_until_ready(state.continuation)
+                state.mark_finished(result=state.continuation)
+            except BaseException as e:  # noqa: BLE001
+                state.mark_finished(error=e)
+        pu.status = ProcessingUnitStatus.READY
+
+    def finalize(self, pu: ProcessingUnit) -> None:
+        pu.status = ProcessingUnitStatus.TERMINATED
+        pu.current_state = None

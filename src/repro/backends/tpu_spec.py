@@ -1,0 +1,99 @@
+"""Static TPU-pod topology backend.
+
+The paper's topology managers discover *present* hardware; this backend
+instead synthesizes the **target** production system's topology (TPU v5e
+pods) so that compile-time planning — mesh construction, dry-runs, roofline
+analysis — can run on a CPU-only container. It plays the role of a vendor
+spec-sheet-driven TopologyManager and is the single source of truth for the
+hardware constants used by `repro.launch.roofline`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.definitions import ComputeResourceKind, MemorySpaceKind
+from repro.core.managers import TopologyManager
+from repro.core.stateless import ComputeResource, Device, MemorySpace, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float
+    hbm_bytes: int
+    hbm_bandwidth: float
+    ici_bandwidth_per_link: float
+    ici_links_per_chip: int
+    vmem_bytes: int
+
+
+# Hardware constants prescribed for this reproduction (v5e-class chip).
+V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bytes=16 << 30,
+    hbm_bandwidth=819e9,
+    ici_bandwidth_per_link=50e9,
+    ici_links_per_chip=4,
+    vmem_bytes=128 << 20,
+)
+
+
+def pod_topology(*, pods: int = 1, pod_shape: tuple[int, int] = (16, 16), chip: ChipSpec = V5E) -> Topology:
+    """Synthesize a `pods`-pod topology of `pod_shape` chips each."""
+    devices = []
+    for p in range(pods):
+        for x in range(pod_shape[0]):
+            for y in range(pod_shape[1]):
+                dev_id = f"{chip.name}-pod{p}-{x}.{y}"
+                cr = ComputeResource(
+                    kind=ComputeResourceKind.TPU_TENSORCORE.value,
+                    index=(p * pod_shape[0] + x) * pod_shape[1] + y,
+                    device_id=dev_id,
+                    peak_flops_bf16=chip.peak_flops_bf16,
+                    attributes={"pod": p, "coords": (x, y)},
+                )
+                hbm = MemorySpace(
+                    kind=MemorySpaceKind.DEVICE_HBM.value,
+                    index=0,
+                    device_id=dev_id,
+                    size_bytes=chip.hbm_bytes,
+                    bandwidth_bytes_per_s=chip.hbm_bandwidth,
+                )
+                vmem = MemorySpace(
+                    kind=MemorySpaceKind.DEVICE_VMEM.value,
+                    index=1,
+                    device_id=dev_id,
+                    size_bytes=chip.vmem_bytes,
+                    bandwidth_bytes_per_s=0.0,
+                    attributes={"compiler_managed": True},
+                )
+                devices.append(
+                    Device(
+                        device_id=dev_id,
+                        kind="tpu",
+                        compute_resources=(cr,),
+                        memory_spaces=(hbm, vmem),
+                        attributes={
+                            "pod": p,
+                            "coords": (x, y),
+                            "ici_bandwidth_per_link": chip.ici_bandwidth_per_link,
+                            "ici_links": chip.ici_links_per_chip,
+                        },
+                    )
+                )
+    return Topology(devices=tuple(devices))
+
+
+class SpecTopologyManager(TopologyManager):
+    """TopologyManager whose 'discovery' is the declared target system."""
+
+    backend_name = "tpu_spec"
+
+    def __init__(self, *, pods: int = 1, pod_shape: tuple[int, int] = (16, 16), chip: ChipSpec = V5E):
+        self.pods = pods
+        self.pod_shape = pod_shape
+        self.chip = chip
+
+    def query_topology(self) -> Topology:
+        return pod_topology(pods=self.pods, pod_shape=self.pod_shape, chip=self.chip)

@@ -1,0 +1,55 @@
+# The paper's primary contribution: the HiCR abstract model — a Runtime
+# Support Layer between applications/runtime-systems and system technologies.
+from .definitions import (
+    ExecutionStateStatus,
+    HiCRError,
+    InstanceStatus,
+    InvalidMemcpyDirectionError,
+    LifetimeError,
+    MemcpyDirection,
+    MemorySpaceMismatchError,
+    ProcessingUnitStatus,
+    UnsupportedOperationError,
+)
+from .managers import (
+    CommunicationManager,
+    ComputeManager,
+    InstanceManager,
+    ManagerSet,
+    MemoryManager,
+    TopologyManager,
+)
+from .registry import (
+    available_backends,
+    build,
+    capability_table,
+    get_backend,
+    register_backend,
+)
+from .stateful import (
+    ExecutionState,
+    GlobalMemorySlot,
+    Instance,
+    LocalMemorySlot,
+    ProcessingUnit,
+)
+from .stateless import (
+    ComputeResource,
+    Device,
+    ExecutionUnit,
+    InstanceTemplate,
+    MemorySpace,
+    Topology,
+)
+
+__all__ = [
+    "CommunicationManager", "ComputeManager", "ComputeResource", "Device",
+    "ExecutionState", "ExecutionStateStatus", "ExecutionUnit",
+    "GlobalMemorySlot", "HiCRError", "Instance", "InstanceManager",
+    "InstanceStatus", "InstanceTemplate", "InvalidMemcpyDirectionError",
+    "LifetimeError", "LocalMemorySlot", "ManagerSet", "MemcpyDirection",
+    "MemoryManager", "MemorySpace", "MemorySpaceMismatchError",
+    "ProcessingUnit", "ProcessingUnitStatus", "Topology", "TopologyManager",
+    "UnsupportedOperationError", "available_backends", "build",
+    "capability_table", "get_backend", "register_backend",
+]

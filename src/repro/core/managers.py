@@ -1,0 +1,277 @@
+"""Abstract HiCR managers (paper §3.1, Fig. 2).
+
+Managers are the effectful components of the model: they trigger
+computation, copy data between devices, or create new application instances.
+Only managers can create instances of other components.
+
+Each manager is an abstract class; *backends* derive them into complete
+classes (paper §4.1). A HiCR application receives managers as abstract
+references and thus remains agnostic to the specific backend choice.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+from .definitions import (
+    InvalidMemcpyDirectionError,
+    MemcpyDirection,
+    UnsupportedOperationError,
+)
+from .stateful import (
+    ExecutionState,
+    GlobalMemorySlot,
+    Instance,
+    LocalMemorySlot,
+    ProcessingUnit,
+)
+from .stateless import (
+    ComputeResource,
+    ExecutionUnit,
+    InstanceTemplate,
+    MemorySpace,
+    Topology,
+)
+
+
+class TopologyManager(abc.ABC):
+    """Discovers full or partial hardware topology (paper §3.1.2).
+
+    A combination of topology managers, each targeting a specific technology,
+    gathers the full picture of the local instance; topologies serialize for
+    broadcast so a global system view can be assembled.
+    """
+
+    backend_name: str = "abstract"
+
+    @abc.abstractmethod
+    def query_topology(self) -> Topology:
+        ...
+
+
+class MemoryManager(abc.ABC):
+    """Creation, registration and destruction of local memory slots
+    (paper §3.1.3). Interface mirrors malloc/free but takes an explicit
+    MemorySpace selecting the device sourcing the allocation."""
+
+    backend_name: str = "abstract"
+
+    @abc.abstractmethod
+    def memory_spaces(self) -> Sequence[MemorySpace]:
+        """The memory spaces this manager can operate on."""
+
+    @abc.abstractmethod
+    def allocate_local_memory_slot(self, space: MemorySpace, size_bytes: int) -> LocalMemorySlot:
+        ...
+
+    @abc.abstractmethod
+    def register_local_memory_slot(self, space: MemorySpace, buffer: Any, size_bytes: int) -> LocalMemorySlot:
+        """Manually record an existing external allocation as a memory slot
+        (e.g. one received from a math library)."""
+
+    @abc.abstractmethod
+    def free_local_memory_slot(self, slot: LocalMemorySlot) -> None:
+        ...
+
+    # -- helper shared by backends -------------------------------------------
+    def _check_space(self, space: MemorySpace):
+        from .definitions import MemorySpaceMismatchError
+
+        known = {(s.kind, s.index, s.device_id) for s in self.memory_spaces()}
+        if (space.kind, space.index, space.device_id) not in known:
+            raise MemorySpaceMismatchError(
+                f"{type(self).__name__} cannot operate on memory space "
+                f"{space.kind}:{space.device_id}:{space.index}"
+            )
+
+
+class CommunicationManager(abc.ABC):
+    """Mediates all communication via memcpy/fence and creates/exchanges
+    global memory slots (paper §3.1.4)."""
+
+    backend_name: str = "abstract"
+
+    # -- direction classification (model-level, shared by all backends) ------
+    @staticmethod
+    def classify(src, dst) -> MemcpyDirection:
+        src_global = isinstance(src, GlobalMemorySlot)
+        dst_global = isinstance(dst, GlobalMemorySlot)
+        if src_global and dst_global:
+            # Global-to-Global entails communication between two remote
+            # instances, neither of which orchestrates the operation —
+            # forbidden by the model.
+            raise InvalidMemcpyDirectionError(
+                "Global-to-Global memcpy is not permitted by the HiCR model"
+            )
+        if not src_global and not dst_global:
+            return MemcpyDirection.LOCAL_TO_LOCAL
+        if dst_global:
+            return MemcpyDirection.LOCAL_TO_GLOBAL
+        return MemcpyDirection.GLOBAL_TO_LOCAL
+
+    def memcpy(self, dst, dst_offset: int, src, src_offset: int, size_bytes: int) -> None:
+        """Initiate a (possibly asynchronous) data transfer. Completion is
+        NOT guaranteed when the call returns — use fence()."""
+        direction = self.classify(src, dst)
+        self._memcpy_impl(direction, dst, dst_offset, src, src_offset, size_bytes)
+
+    @abc.abstractmethod
+    def _memcpy_impl(
+        self,
+        direction: MemcpyDirection,
+        dst,
+        dst_offset: int,
+        src,
+        src_offset: int,
+        size_bytes: int,
+    ) -> None:
+        ...
+
+    @abc.abstractmethod
+    def fence(self, tag: int = 0) -> None:
+        """Suspend execution until the expected incoming and outgoing
+        transfers have completed."""
+
+    # -- global memory slots --------------------------------------------------
+    @abc.abstractmethod
+    def exchange_global_memory_slots(
+        self, tag: int, local_slots: Mapping[int, LocalMemorySlot]
+    ) -> Mapping[int, GlobalMemorySlot]:
+        """Collective: every instance volunteers zero or more local slots
+        (keyed by a user-defined key); returns the union of all exchanged
+        slots as global memory slots addressed by (tag, key)."""
+
+    def destroy_global_memory_slot(self, slot: GlobalMemorySlot) -> None:  # pragma: no cover - default
+        raise UnsupportedOperationError(f"{type(self).__name__} cannot destroy global slots")
+
+
+class ComputeManager(abc.ABC):
+    """Carries out computing operations: manages the lifetime of processing
+    units, prescribes the format of execution units, and oversees execution
+    states (paper §3.1.5)."""
+
+    backend_name: str = "abstract"
+    #: Execution-unit formats this manager accepts.
+    supported_formats: Sequence[str] = ("python-callable",)
+    #: Whether execution states may be suspended/resumed.
+    supports_suspension: bool = False
+
+    # -- component creation ----------------------------------------------------
+    def create_execution_unit(self, fn: Callable, *, name: str = "anonymous", **metadata) -> ExecutionUnit:
+        return ExecutionUnit(name=name, format=self.supported_formats[0], fn=fn, metadata=metadata)
+
+    @abc.abstractmethod
+    def create_processing_unit(self, resource: ComputeResource) -> ProcessingUnit:
+        ...
+
+    @abc.abstractmethod
+    def create_execution_state(
+        self, unit: ExecutionUnit, *args, **kwargs
+    ) -> ExecutionState:
+        ...
+
+    # -- lifecycle ---------------------------------------------------------------
+    @abc.abstractmethod
+    def initialize(self, pu: ProcessingUnit) -> None:
+        ...
+
+    @abc.abstractmethod
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
+        """Assign `state` to `pu` and start computing it asynchronously."""
+
+    def suspend(self, pu: ProcessingUnit) -> None:
+        raise UnsupportedOperationError(f"{type(self).__name__} does not support suspension")
+
+    def resume(self, pu: ProcessingUnit) -> None:
+        raise UnsupportedOperationError(f"{type(self).__name__} does not support suspension")
+
+    @abc.abstractmethod
+    def await_(self, pu: ProcessingUnit) -> None:
+        """Block until the processing unit's current execution state finishes."""
+
+    @abc.abstractmethod
+    def finalize(self, pu: ProcessingUnit) -> None:
+        """Terminate the processing unit and free its resources."""
+
+    def check_format(self, unit: ExecutionUnit):
+        if unit.format not in self.supported_formats:
+            raise UnsupportedOperationError(
+                f"{type(self).__name__} accepts formats {self.supported_formats}, "
+                f"got {unit.format!r}"
+            )
+
+
+class InstanceManager(abc.ABC):
+    """Handles all operations involving instances (paper §3.1.1): detecting
+    launch-time instances, creating instances at runtime from templates, and
+    root-instance designation."""
+
+    backend_name: str = "abstract"
+
+    @abc.abstractmethod
+    def get_instances(self) -> Sequence[Instance]:
+        ...
+
+    @abc.abstractmethod
+    def get_current_instance(self) -> Instance:
+        ...
+
+    def get_root_instance(self) -> Instance:
+        for inst in self.get_instances():
+            if inst.is_root():
+                return inst
+        raise RuntimeError("no root instance found")
+
+    def create_instance_template(self, **requirements) -> InstanceTemplate:
+        return InstanceTemplate(**requirements)
+
+    def create_instances(self, count: int, template: InstanceTemplate) -> Sequence[Instance]:
+        raise UnsupportedOperationError(
+            f"{type(self).__name__} cannot create instances at runtime"
+        )
+
+    def terminate_instance(self, instance: Instance) -> None:
+        raise UnsupportedOperationError(
+            f"{type(self).__name__} cannot terminate instances"
+        )
+
+    # -- RPC-ish primitives used by the RPC frontend ---------------------------
+    def send_message(self, instance: Instance, payload: bytes) -> None:
+        raise UnsupportedOperationError(f"{type(self).__name__} has no message path")
+
+    def recv_message(self, timeout: float | None = None) -> Optional[bytes]:
+        raise UnsupportedOperationError(f"{type(self).__name__} has no message path")
+
+
+class ManagerSet:
+    """Convenience bundle: the set of managers a HiCR application receives.
+
+    Mirrors the paper's usage pattern (Fig. 4): backends are instantiated by
+    the launcher and passed by reference; the application only sees abstract
+    classes.
+    """
+
+    def __init__(
+        self,
+        *,
+        instance_manager: InstanceManager | None = None,
+        topology_managers: Sequence[TopologyManager] = (),
+        memory_manager: MemoryManager | None = None,
+        communication_manager: CommunicationManager | None = None,
+        compute_manager: ComputeManager | None = None,
+        task_compute_manager: ComputeManager | None = None,
+    ):
+        self.instance_manager = instance_manager
+        self.topology_managers = tuple(topology_managers)
+        self.memory_manager = memory_manager
+        self.communication_manager = communication_manager
+        self.compute_manager = compute_manager
+        #: Possibly-distinct manager for task execution states (paper §4.3,
+        #: Tasking frontend: scheduling on CPU, tasks on an accelerator).
+        self.task_compute_manager = task_compute_manager or compute_manager
+
+    def query_full_topology(self) -> Topology:
+        topo = Topology()
+        for tm in self.topology_managers:
+            topo = topo.merge(tm.query_topology())
+        return topo

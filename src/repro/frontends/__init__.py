@@ -1,0 +1,6 @@
+"""Built-in HiCR frontends (paper §4.3): higher-level, ready-to-use features
+built exclusively on calls to the HiCR core API — hence implementation-
+agnostic and portable across backends."""
+from . import channels, dataobject, rpc, tasking  # noqa: F401
+
+__all__ = ["channels", "dataobject", "rpc", "tasking"]

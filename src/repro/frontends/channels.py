@@ -1,0 +1,235 @@
+"""Channels frontend (paper §4.3): frequent, persistent transfer of small
+messages across instances with low-latency QoS.
+
+Operates by exchanging pre-allocated circular buffers between sender and
+receiver: the producer knows where to push the next message as long as the
+buffer is not full; the consumer notifies consumption by advancing its head
+counter. Transfer and synchronization messages are thereby decoupled —
+minimal per-message handshaking.
+
+Supported paradigms, as in the paper:
+* **SPSC** — single producer, single consumer.
+* **MPSC locking** — a shared channel guarded by collective exclusive access
+  (a global lock), at the price of lock traffic.
+* **MPSC non-locking** — dedicated per-producer buffers; no lock, more
+  memory.
+
+Built exclusively on the HiCR core API: slot allocation (MemoryManager),
+collective slot exchange + one-sided memcpy + fence (CommunicationManager).
+Counter updates are single-writer by construction: the producer owns the
+tail counter, the consumer owns the head counter.
+"""
+from __future__ import annotations
+
+import struct
+import time
+from typing import Optional, Sequence
+
+from repro.core.managers import CommunicationManager, MemoryManager
+
+# key layout within a channel's exchange tag
+KEY_PAYLOAD = 0
+KEY_TAIL = 1  # producer-written
+KEY_HEAD = 2  # consumer-written
+_CTR = struct.Struct("<q")
+_PER_PRODUCER_STRIDE = 16
+
+
+def _read_counter(comm: CommunicationManager, mem: MemoryManager, gslot, scratch) -> int:
+    comm.memcpy(scratch, 0, gslot, 0, _CTR.size)
+    comm.fence(gslot.tag)
+    return _CTR.unpack(bytes(scratch.handle[: _CTR.size]))[0]
+
+
+def _write_counter(comm: CommunicationManager, scratch, gslot, value: int) -> None:
+    scratch.handle[: _CTR.size] = bytearray(_CTR.pack(value))
+    comm.memcpy(gslot, 0, scratch, 0, _CTR.size)
+    comm.fence(gslot.tag)
+
+
+class _EndBase:
+    def __init__(self, comm, mem, tag: int, capacity: int, msg_size: int):
+        self.comm = comm
+        self.mem = mem
+        self.tag = tag
+        self.capacity = capacity
+        self.msg_size = msg_size
+        space = mem.memory_spaces()[0]
+        self._scratch = mem.allocate_local_memory_slot(space, max(msg_size, _CTR.size))
+        self._space = space
+
+
+class SPSCProducer(_EndBase):
+    """Producer end. Construction participates in the collective exchange."""
+
+    def __init__(self, comm, mem, tag: int, capacity: int, msg_size: int, *, key_offset: int = 0):
+        super().__init__(comm, mem, tag, capacity, msg_size)
+        gslots = comm.exchange_global_memory_slots(tag, {})
+        self._payload = gslots[KEY_PAYLOAD + key_offset]
+        self._tail_slot = gslots[KEY_TAIL + key_offset]
+        self._head_slot = gslots[KEY_HEAD + key_offset]
+        self._tail = 0
+        self._cached_head = 0
+
+    def _full(self) -> bool:
+        if self._tail - self._cached_head < self.capacity:
+            return False
+        self._cached_head = _read_counter(self.comm, self.mem, self._head_slot, self._scratch)
+        return self._tail - self._cached_head >= self.capacity
+
+    def try_push(self, data: bytes) -> bool:
+        assert len(data) <= self.msg_size
+        if self._full():
+            return False
+        slot_idx = self._tail % self.capacity
+        self._scratch.handle[: len(data)] = bytearray(data)
+        self.comm.memcpy(self._payload, slot_idx * self.msg_size, self._scratch, 0, self.msg_size)
+        self.comm.fence(self.tag)
+        self._tail += 1
+        _write_counter(self.comm, self._scratch, self._tail_slot, self._tail)
+        return True
+
+    def push(self, data: bytes, *, timeout: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout
+        while not self.try_push(data):
+            if time.monotonic() > deadline:
+                raise TimeoutError("channel full")
+            time.sleep(0)
+
+
+class SPSCConsumer(_EndBase):
+    """Consumer end: owns the buffers, volunteers them in the exchange."""
+
+    def __init__(self, comm, mem, tag: int, capacity: int, msg_size: int, *, key_offset: int = 0):
+        super().__init__(comm, mem, tag, capacity, msg_size)
+        self._payload_local = mem.allocate_local_memory_slot(self._space, capacity * msg_size)
+        self._tail_local = mem.allocate_local_memory_slot(self._space, _CTR.size)
+        self._head_local = mem.allocate_local_memory_slot(self._space, _CTR.size)
+        gslots = comm.exchange_global_memory_slots(
+            tag,
+            {
+                KEY_PAYLOAD + key_offset: self._payload_local,
+                KEY_TAIL + key_offset: self._tail_local,
+                KEY_HEAD + key_offset: self._head_local,
+            },
+        )
+        self._head_slot = gslots[KEY_HEAD + key_offset]
+        self._tail_slot = gslots[KEY_TAIL + key_offset]
+        self._head = 0
+
+    def depth(self) -> int:
+        tail = _CTR.unpack(bytes(self._tail_local.handle[: _CTR.size]))[0]
+        return tail - self._head
+
+    def try_pop(self) -> Optional[bytes]:
+        if self.depth() <= 0:
+            return None
+        slot_idx = self._head % self.capacity
+        off = slot_idx * self.msg_size
+        data = bytes(self._payload_local.handle[off : off + self.msg_size])
+        self._head += 1
+        _write_counter(self.comm, self._scratch, self._head_slot, self._head)
+        return data
+
+    def pop(self, *, timeout: float = 30.0) -> bytes:
+        deadline = time.monotonic() + timeout
+        while True:
+            data = self.try_pop()
+            if data is not None:
+                return data
+            if time.monotonic() > deadline:
+                raise TimeoutError("channel empty")
+            time.sleep(0)
+
+
+# ---------------------------------------------------------------------------
+# MPSC
+# ---------------------------------------------------------------------------
+
+
+class MPSCLockingProducer(SPSCProducer):
+    """Shared channel; collective exclusive access prevents overflow races.
+
+    The global lock also protects the (read-tail, write-payload, bump-tail)
+    critical section because multiple producers share one tail counter."""
+
+    def try_push(self, data: bytes) -> bool:
+        self.comm.acquire_global_lock(self.tag)
+        try:
+            # tail is shared between producers: re-read under the lock
+            self._tail = _read_counter(self.comm, self.mem, self._tail_slot, self._scratch)
+            if self._full():
+                return False
+            slot_idx = self._tail % self.capacity
+            self._scratch.handle[: len(data)] = bytearray(data)
+            self.comm.memcpy(self._payload, slot_idx * self.msg_size, self._scratch, 0, self.msg_size)
+            self.comm.fence(self.tag)
+            self._tail += 1
+            _write_counter(self.comm, self._scratch, self._tail_slot, self._tail)
+            return True
+        finally:
+            self.comm.release_global_lock(self.tag)
+
+
+MPSCLockingConsumer = SPSCConsumer
+
+
+class MPSCNonLockingProducer(SPSCProducer):
+    """Dedicated buffer per producer: no lock, higher memory footprint. Each
+    producer gets its own key range within the shared tag."""
+
+    def __init__(self, comm, mem, tag: int, capacity: int, msg_size: int, *, producer_index: int):
+        super().__init__(
+            comm, mem, tag, capacity, msg_size,
+            key_offset=producer_index * _PER_PRODUCER_STRIDE,
+        )
+
+
+class MPSCNonLockingConsumer:
+    """Consumer owning one SPSC ring per producer; pops round-robin."""
+
+    def __init__(self, comm, mem, tag: int, capacity: int, msg_size: int, *, n_producers: int):
+        # one collective exchange covering all producer rings
+        self.rings: list[SPSCConsumer] = []
+        space = mem.memory_spaces()[0]
+        contributions = {}
+        locals_per_ring = []
+        for p in range(n_producers):
+            off = p * _PER_PRODUCER_STRIDE
+            payload = mem.allocate_local_memory_slot(space, capacity * msg_size)
+            tail = mem.allocate_local_memory_slot(space, _CTR.size)
+            head = mem.allocate_local_memory_slot(space, _CTR.size)
+            contributions[KEY_PAYLOAD + off] = payload
+            contributions[KEY_TAIL + off] = tail
+            contributions[KEY_HEAD + off] = head
+            locals_per_ring.append((payload, tail, head))
+        gslots = comm.exchange_global_memory_slots(tag, contributions)
+        for p, (payload, tail, head) in enumerate(locals_per_ring):
+            ring = object.__new__(SPSCConsumer)
+            _EndBase.__init__(ring, comm, mem, tag, capacity, msg_size)
+            off = p * _PER_PRODUCER_STRIDE
+            ring._payload_local, ring._tail_local, ring._head_local = payload, tail, head
+            ring._head_slot = gslots[KEY_HEAD + off]
+            ring._tail_slot = gslots[KEY_TAIL + off]
+            ring._head = 0
+            self.rings.append(ring)
+        self._rr = 0
+
+    def try_pop(self) -> Optional[bytes]:
+        for _ in range(len(self.rings)):
+            ring = self.rings[self._rr]
+            self._rr = (self._rr + 1) % len(self.rings)
+            data = ring.try_pop()
+            if data is not None:
+                return data
+        return None
+
+    def pop(self, *, timeout: float = 30.0) -> bytes:
+        deadline = time.monotonic() + timeout
+        while True:
+            data = self.try_pop()
+            if data is not None:
+                return data
+            if time.monotonic() > deadline:
+                raise TimeoutError("channel empty")
+            time.sleep(0)

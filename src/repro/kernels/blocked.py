@@ -1,0 +1,228 @@
+"""Blocked (flash-style) attention at the XLA level — the Pallas kernel's
+portable twin, used on the CPU/XLA path and inside dry-run lowering.
+
+The naive oracle materializes (B, KV, g, Sq, Skv) fp32 scores: 17 GiB/layer
+for gemma3 train_4k per device — the dominant §Roofline memory term. This
+implementation never materializes more than one (q_chunk × kv_chunk) score
+block per step:
+
+* **global (causal/full) layers** — lax.scan over q chunks; inner lax.scan
+  over kv chunks with the online-softmax (m, l, acc) carry.
+* **sliding-window layers** — band attention: for each q chunk, a
+  dynamic-slice of the (window + q_chunk) key band; work is O(S·window),
+  not O(S²).
+
+The per-q-chunk body is jax.checkpoint'ed so the backward pass recomputes
+score blocks instead of saving them (flash-attention backward semantics).
+Numerics: fp32 softmax, same large-negative masking as ref.attention; must
+match the oracle to tolerance (tests/test_kernels.py::TestBlockedAttention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (MXU-friendly when possible)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def attention_blocked(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    q_offset=0,
+    scale: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd). Returns (B, Sq, H, hd).
+
+    `window` must be a static python int here (the models pass static
+    per-layer windows when using the blocked path)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    groups = H // KV
+    scale = scale if scale is not None else 1.0 / (hd**0.5)
+
+    qc = _pick_chunk(Sq, q_chunk)
+    nq = Sq // qc
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, groups, hd)
+    qg = jnp.moveaxis(qg, 1, 3)  # (B, KV, g, Sq, hd)
+    kf = jnp.moveaxis(k.astype(jnp.float32), 1, 2)  # (B, KV, Skv, hd)
+    vf = jnp.moveaxis(v.astype(jnp.float32), 1, 2)
+
+    if window and int(window) > 0 and causal and prefix_len == 0:
+        out = _banded(qg, kf, vf, int(window), qc, q_offset)
+    else:
+        out = _global(qg, kf, vf, causal, prefix_len, q_offset, qc, kv_chunk)
+
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def _softmax_block(s, vblk, m_prev, l_prev, acc_prev):
+    """One online-softmax update. s: (..., qc, kc); vblk: (B,KV,kc,hd)."""
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jnp.einsum("bkgqc,bkcd->bkgqd", p, vblk)
+    return m_new, l_new, acc_new
+
+
+def _global(qg, kf, vf, causal, prefix_len, q_offset, qc, kv_chunk):
+    B, KV, g, Sq, hd = qg.shape
+    Skv = kf.shape[2]
+    kc = _pick_chunk(Skv, kv_chunk)
+    nk = Skv // kc
+    kb = kf.reshape(B, KV, nk, kc, hd)
+    vb = vf.reshape(B, KV, nk, kc, hd)
+    qb = qg.reshape(B, KV, g, Sq // qc, qc, hd)
+
+    def q_body(_, xs):
+        qi, q0 = xs  # qi: (B,KV,g,qc,hd); q0: scalar chunk start
+        q_pos = q_offset + q0 + jnp.arange(qc)[:, None]  # (qc, 1)
+
+        def kv_body(carry, kxs):
+            m_prev, l_prev, acc_prev = carry
+            kblk, vblk, k0 = kxs
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qi, kblk)
+            k_pos = k0 + jnp.arange(kc)[None, :]  # (1, kc)
+            if causal:
+                mask = k_pos <= q_pos
+                if prefix_len > 0:
+                    mask = mask | ((q_pos < prefix_len) & (k_pos < prefix_len))
+            else:
+                mask = jnp.ones((qc, kc), bool)
+            s = jnp.where(mask, s, NEG_INF)
+            return _softmax_block(s, vblk, m_prev, l_prev, acc_prev), None
+
+        init = (
+            jnp.full((B, KV, g, qc, 1), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, g, qc, 1), jnp.float32),
+            jnp.zeros((B, KV, g, qc, hd), jnp.float32),
+        )
+        k0s = jnp.arange(nk) * kc
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, init, (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), k0s)
+        )
+        return None, acc / jnp.maximum(l, 1e-30)
+
+    q0s = jnp.arange(Sq // qc) * qc
+    _, outs = jax.lax.scan(
+        jax.checkpoint(q_body), None, (jnp.moveaxis(qb, 3, 0), q0s)
+    )
+    # outs: (nq, B, KV, g, qc, hd) -> (B, KV, g, Sq, hd)
+    outs = jnp.moveaxis(outs, 0, 3)
+    return outs.reshape(B, KV, g, Sq, hd)
+
+
+def gated_linear_scan_sequential(q, k, v, log_a, *, chunk: int = 128, initial_state=None):
+    """Sequential-chunk SSD/mLSTM recurrence: identical math to
+    ref.gated_linear_scan but lax.scan's over chunks so only ONE chunk's
+    (L, L) gate matrix is live at a time (the vectorized oracle materializes
+    all C of them: (B, H, C, L, L) fp32 — the dominant zamba2 temp term).
+    The chunk body is jax.checkpoint'ed: backward recomputes gates blockwise.
+
+    q, k: (B, H, S, dk); v: (B, H, S, dv); log_a: (B, H, S).
+    Returns (y: (B, H, S, dv), final_state: (B, H, dk, dv))."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    C = S // chunk
+    L = chunk
+
+    def to_chunks(x, d):
+        # keep the input dtype (bf16): the fp32 cast happens per chunk inside
+        # the checkpointed body, halving the live chunked-input footprint
+        return jnp.moveaxis(x.reshape(B, H, C, L, d), 2, 0)
+
+    qs = to_chunks(q, dk)
+    ks = to_chunks(k, dk)
+    vs = to_chunks(v, dv)
+    las = jnp.moveaxis(log_a.astype(jnp.float32).reshape(B, H, C, L), 2, 0)
+
+    tri = jnp.tril(jnp.ones((L, L), dtype=bool))
+
+    def body(state, xs):
+        qf, kf, vf, la = xs  # (B,H,L,dk/..)
+        qf, kf, vf = (t.astype(jnp.float32) for t in (qf, kf, vf))
+        A = jnp.cumsum(la, axis=-1)  # (B,H,L)
+        A_tot = A[..., -1]
+        # intra-chunk
+        decay_ij = A[..., :, None] - A[..., None, :]
+        gates = jnp.where(tri, jnp.exp(decay_ij), 0.0)
+        scores = jnp.einsum("bhid,bhjd->bhij", qf, kf) * gates
+        y_intra = jnp.einsum("bhij,bhjv->bhiv", scores, vf)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bhid,bhdv->bhiv", qf * jnp.exp(A)[..., None], state)
+        # state update
+        k_scaled = kf * jnp.exp(A_tot[..., None] - A)[..., None]
+        chunk_state = jnp.einsum("bhjd,bhjv->bhdv", k_scaled, vf)
+        new_state = jnp.exp(A_tot)[..., None, None] * state + chunk_state
+        # emit per-chunk outputs in the INPUT dtype: the stacked (C,B,H,L,dv)
+        # output otherwise lives in fp32 (2× the footprint for nothing — the
+        # caller casts to q.dtype anyway)
+        return new_state, (y_intra + y_inter).astype(q.dtype)
+
+    init = (
+        jnp.zeros((B, H, dk, dv), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    final_state, ys = jax.lax.scan(jax.checkpoint(body), init, (qs, ks, vs, las))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, S, dv)
+    return y, final_state
+
+
+def _banded(qg, kf, vf, window, qc, q_offset):
+    """Sliding-window band attention: per q chunk, one dynamic-slice key
+    band of length window+qc. Zero-pad keys on the left so the slice is
+    always in-bounds; padded slots are masked by position validity."""
+    B, KV, g, Sq, hd = qg.shape
+    Skv = kf.shape[2]
+    band = window + qc
+    pad = window
+    kp = jnp.pad(kf, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+    vp = jnp.pad(vf, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+    qb = qg.reshape(B, KV, g, Sq // qc, qc, hd)
+
+    def q_body(_, xs):
+        qi, q0 = xs
+        # keys [q0 - window, q0 + qc) in original coords = [q0, q0+band) padded
+        kblk = jax.lax.dynamic_slice_in_dim(kp, q0, band, axis=2)
+        vblk = jax.lax.dynamic_slice_in_dim(vp, q0, band, axis=2)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qi, kblk)
+        q_pos = q_offset + q0 + jnp.arange(qc)[:, None]
+        k_pos = q_offset + q0 - window + jnp.arange(band)[None, :]
+        mask = (k_pos <= q_pos) & (q_pos - k_pos < window)
+        # validity of padded slots: absolute original key index >= 0
+        orig = q0 - window + jnp.arange(band)[None, :]
+        mask = mask & (orig >= 0)
+        s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        acc = jnp.einsum("bkgqc,bkcd->bkgqd", p, vblk)
+        return None, acc / jnp.maximum(l, 1e-30)
+
+    q0s = jnp.arange(Sq // qc) * qc
+    _, outs = jax.lax.scan(jax.checkpoint(q_body), None, (jnp.moveaxis(qb, 3, 0), q0s))
+    outs = jnp.moveaxis(outs, 0, 3)
+    return outs.reshape(B, KV, g, Sq, hd)

@@ -1,0 +1,85 @@
+"""Dispatching wrappers for the kernel layer.
+
+Models call these entry points; `impl` selects the implementation:
+
+* ``"ref"``   — the pure-jnp oracle (CPU tests, dry-run lowering).
+* ``"pallas"`` — the Pallas TPU kernel (interpret=True on CPU for
+  validation; compiled on real TPU).
+
+The default is resolved from the architecture config's ``use_pallas`` flag
+by the model code; benchmarks/tests pass `impl` explicitly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from . import ref
+
+_INTERPRET = True  # this container is CPU-only; real TPU flips this off
+
+
+def set_interpret(value: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = value
+
+
+def attention(q, k, v, *, causal=True, window=0, prefix_len=0, q_offset=0,
+              kv_valid_len=None, scale=None, impl: str = "ref"):
+    if impl == "pallas":
+        from . import flash_attention
+
+        # The Pallas kernel covers the self-attention fast path (no
+        # kv_valid_len ragged masking); fall back to ref otherwise.
+        if kv_valid_len is None:
+            return flash_attention.flash_attention(
+                q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+                q_offset=q_offset, scale=scale, interpret=_INTERPRET,
+            )
+    if impl == "blocked":
+        from . import blocked
+
+        # blocked path needs a static window; traced windows (scan-stacked
+        # per-layer window arrays) and ragged kv fall back to the oracle.
+        if kv_valid_len is None and isinstance(window, int):
+            return blocked.attention_blocked(
+                q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+                q_offset=q_offset, scale=scale,
+            )
+    return ref.attention(
+        q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+        q_offset=q_offset, kv_valid_len=kv_valid_len, scale=scale,
+    )
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, scale=None, impl: str = "ref"):
+    if impl == "pallas":
+        from . import decode_attention as da
+
+        return da.decode_attention(
+            q, k_cache, v_cache, pos, scale=scale, interpret=_INTERPRET
+        )
+    return ref.decode_attention(q, k_cache, v_cache, pos, window=window, scale=scale)
+
+
+def gated_linear_scan(q, k, v, log_a, *, chunk: int = 128, initial_state=None, impl: str = "ref"):
+    if impl == "pallas":
+        from . import linear_scan
+
+        return linear_scan.gated_linear_scan(
+            q, k, v, log_a, chunk=chunk, initial_state=initial_state,
+            interpret=_INTERPRET,
+        )
+    if impl == "sequential":
+        from . import blocked
+
+        return blocked.gated_linear_scan_sequential(
+            q, k, v, log_a, chunk=chunk, initial_state=initial_state
+        )
+    return ref.gated_linear_scan(q, k, v, log_a, chunk=chunk, initial_state=initial_state)
+
+
+def gated_linear_step(q_t, k_t, v_t, log_a_t, state):
+    return ref.gated_linear_step(q_t, k_t, v_t, log_a_t, state)

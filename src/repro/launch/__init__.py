@@ -1,0 +1,3 @@
+# Launch layer: mesh construction, multi-pod dry-run, roofline extraction,
+# end-to-end train/serve drivers. NOTE: dryrun must be executed as a module
+# entry point (it sets XLA_FLAGS before importing jax).

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+`compiled.cost_analysis()` supplies FLOPs / bytes-accessed for the SPMD-
+partitioned per-device module; collective bytes are NOT in cost_analysis, so
+we parse the optimized HLO text and sum the output operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Collectives inside `while` bodies (scan-over-layers) appear once in the text
+but execute trip_count times; we attribute per-computation bytes through the
+computation graph, multiplying while-body contributions by the trip count
+recovered from the loop's induction-variable compare (best-effort; falls
+back to the caller-provided default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.backends.tpu_spec import ChipSpec, V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->", re.M)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """Split HLO module text into named computations."""
+    comps: Dict[str, str] = {}
+    name, lines = None, []
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            name, lines = m.group(1), []
+        elif line.startswith("}"):
+            if name is not None:
+                comps[name] = "\n".join(lines)
+            name = None
+        elif name is not None:
+            lines.append(line)
+    return comps
+
+
+def collective_bytes(hlo_text: str, *, default_trip_count: int = 1) -> Dict[str, float]:
+    """Per-collective-kind bytes, with while-body amplification.
+
+    Returns {kind: bytes, ..., "total": float}."""
+    comps = _split_computations(hlo_text)
+
+    # map: computation -> bytes per collective kind (single execution)
+    per_comp: Dict[str, Dict[str, int]] = {}
+    for cname, body in comps.items():
+        counts: Dict[str, int] = {}
+        for line in body.splitlines():
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in line or f"{kind}-start(" in line or f" {kind}-start(" in line:
+                    lhs = line.split(" = ", 1)
+                    shape_src = lhs[1].split("(", 1)[0] if len(lhs) == 2 else line
+                    counts[kind] = counts.get(kind, 0) + _shape_bytes(shape_src)
+                    break
+        per_comp[cname] = counts
+
+    # multiplicity: computations reached from while ops run trip_count times.
+    mult: Dict[str, float] = {c: 1.0 for c in comps}
+    for cname, body in comps.items():
+        for line in body.splitlines():
+            if " while(" in line:
+                m = re.search(r"body=%?([\w\.\-]+)", line)
+                if m:
+                    trip = default_trip_count
+                    tm = re.search(r'trip_count="?(\d+)"?', line)
+                    if tm:
+                        trip = int(tm.group(1))
+                    body_name = m.group(1)
+                    if body_name in mult:
+                        mult[body_name] = max(mult[body_name], float(trip))
+
+    # propagate multiplicity one level into calls/fusions inside while bodies
+    for cname, body in comps.items():
+        if mult.get(cname, 1.0) <= 1.0:
+            continue
+        for line in body.splitlines():
+            for ref in re.findall(r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)", line):
+                if ref in mult:
+                    mult[ref] = max(mult[ref], mult[cname])
+
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for cname, counts in per_comp.items():
+        for kind, b in counts.items():
+            out[kind] += b * mult.get(cname, 1.0)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    chip: ChipSpec
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.chip.peak_flops_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / self.chip.hbm_bandwidth
+
+    @property
+    def collective_s(self) -> float:
+        # formula prescribed: collective_bytes / (chips × link_bw); with
+        # per-device bytes this is bytes / link_bw
+        return self.collective_bytes_per_device / self.chip.ici_bandwidth_per_link
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "chips": self.chips,
+        }
+
+
+def analyze(compiled, *, chips: int, default_trip_count: int = 1, chip: ChipSpec = V5E) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text(), default_trip_count=default_trip_count)
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=coll["total"],
+        chips=chips,
+        chip=chip,
+    )
+
+
+def model_flops(cfg, shape, *, n_params: int, n_active_params: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train; decode
+    and prefill use 2·N·D (forward only)."""
+    D = shape.global_batch * shape.seq_len if shape.kind != "decode" else shape.global_batch
+    N = n_active_params if (cfg.is_moe and n_active_params) else n_params
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * N * D

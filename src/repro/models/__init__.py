@@ -1,0 +1,4 @@
+"""Composable model definitions for the assigned architecture pool."""
+from . import model_zoo  # noqa: F401
+
+build = model_zoo.build

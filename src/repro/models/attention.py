@@ -1,0 +1,166 @@
+"""Attention layers: GQA/MQA self-attention (full, sliding-window,
+prefix-LM), cross-attention, and KV-cache decode paths.
+
+Weight shapes keep heads as an explicit dimension so tensor parallelism can
+shard them over the `model` mesh axis via logical axes:
+
+    wq: (d, H, hd)      ("embed", "heads", "head_dim")
+    wk: (d, KV, hd)     ("embed", "kv_heads", "head_dim")
+    wv: (d, KV, hd)
+    wo: (H, hd, d)      ("heads", "head_dim", "embed")
+
+When stacked for scan-over-layers a leading ("layers",) axis is prepended.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.kernels import ops
+from .common import ParamBuilder, apply_rope
+
+
+def init_attention(pb: ParamBuilder, cfg: ArchConfig, n_layers: Optional[int] = None):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    lead = () if n_layers is None else (n_layers,)
+    lax = () if n_layers is None else ("layers",)
+    return {
+        "wq": pb.normal(lead + (d, H, hd), lax + ("embed", "heads", "head_dim"), fan_in=d),
+        "wk": pb.normal(lead + (d, KV, hd), lax + ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wv": pb.normal(lead + (d, KV, hd), lax + ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wo": pb.normal(lead + (H, hd, d), lax + ("heads", "head_dim", "embed"), fan_in=H * hd),
+    }
+
+
+def _project_qkv(cfg: ArchConfig, p, x, positions):
+    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd), RoPE'd."""
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if positions is not None:
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(
+    cfg: ArchConfig,
+    p,
+    x,
+    *,
+    positions=None,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """Full-sequence self-attention (training / prefill)."""
+    B, S, d = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    impl = _impl(cfg)
+    out = ops.attention(q, k, v, causal=causal, window=window, prefix_len=prefix_len, impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _impl(cfg: ArchConfig) -> str:
+    if cfg.use_pallas:
+        return "pallas"
+    return "blocked" if cfg.attention_impl == "blocked" else "ref"
+
+
+def prefill_attention(
+    cfg: ArchConfig, p, x, cache: Tuple[jax.Array, jax.Array], *, window: int = 0, prefix_len: int = 0
+):
+    """Prefill: full-seq attention that also fills the KV cache.
+
+    cache: (k_cache, v_cache) each (B, S_buf, KV, hd); for windowed layers
+    S_buf == window (ring buffer), else S_buf >= S.
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    impl = _impl(cfg)
+    out = ops.attention(q, k, v, causal=True, window=window, prefix_len=prefix_len, impl=impl)
+    k_cache, v_cache = cache
+    S_buf = k_cache.shape[1]
+    if window and S_buf == window:
+        # ring buffer: keep the last `window` entries at slots pos % window
+        take = min(window, S)
+        tail_pos = jnp.arange(S - take, S)
+        slots = tail_pos % window
+        k_cache = k_cache.at[:, slots].set(k[:, S - take :].astype(k_cache.dtype))
+        v_cache = v_cache.at[:, slots].set(v[:, S - take :].astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, 0, 0, 0))
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return proj, (k_cache, v_cache)
+
+
+def decode_self_attention(
+    cfg: ArchConfig,
+    p,
+    x,
+    cache: Tuple[jax.Array, jax.Array],
+    pos,
+    *,
+    window: int = 0,
+):
+    """One-token decode step. x: (B, 1, d); pos: scalar current position.
+    Returns (out (B,1,d), new_cache)."""
+    B, S1, d = x.shape
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _project_qkv(cfg, p, x, positions)  # (B,1,H,hd)/(B,1,KV,hd)
+    k_cache, v_cache = cache
+    S_buf = k_cache.shape[1]
+    slot = (pos % window) if window and S_buf == window else pos
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    impl = "pallas" if cfg.use_pallas else "ref"  # decode stays unblocked (O(S) already)
+    # For ring buffers every slot holds an in-window position; validity is
+    # handled by `pos` (ref.decode_attention masks slots > pos only when the
+    # buffer is longer than the written range).
+    eff_pos = jnp.minimum(pos, S_buf - 1)
+    out = ops.decode_attention(q[:, 0], k_cache, v_cache, eff_pos, window=window, impl=impl)
+    proj = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
+    return proj[:, None, :], (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(pb: ParamBuilder, cfg: ArchConfig, n_layers: Optional[int] = None):
+    return init_attention(pb, cfg, n_layers)
+
+
+def cross_attention_kv(cfg: ArchConfig, p, enc_out):
+    """Precompute encoder K/V once per sequence. enc_out: (B, T, d)."""
+    cd = enc_out.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(cd))
+    return k, v
+
+
+def cross_attention(cfg: ArchConfig, p, x, enc_kv):
+    """x: (B,S,d) attends to precomputed encoder K/V (no mask, no RoPE)."""
+    cd = x.dtype
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    impl = _impl(cfg)
+    out = ops.attention(q, k, v, causal=False, impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, *, window: int = 0, dtype=jnp.bfloat16):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    S_buf = min(window, max_len) if window else max_len
+    shape = (batch, S_buf, KV, hd)
+    return jnp.zeros(shape, dtype=dtype), jnp.zeros(shape, dtype=dtype)

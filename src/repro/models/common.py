@@ -1,0 +1,171 @@
+"""Common model building blocks: parameter builder with logical sharding
+axes, norms, RoPE, embeddings, activation functions, dtype policy."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]  # same tree structure as Params; leaves are tuples of logical axis names
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+def maybe_scan(cfg, body, carry, xs):
+    """jax.lax.scan when cfg.scan_layers (compile-time O(1) in depth), else a
+    Python unroll (exact cost_analysis; sometimes better XLA scheduling —
+    both are §Perf hillclimb levers)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+class ParamBuilder:
+    """Creates parameters and records their logical sharding axes in a
+    parallel tree. Logical axes vocabulary:
+
+      layers, embed, heads, kv_heads, head_dim, mlp, vocab, expert,
+      ssm_inner, ssm_state, conv, norm, enc_layers
+    """
+
+    def __init__(self, key: jax.Array, param_dtype):
+        self._key = key
+        self.dtype = param_dtype
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def normal(self, shape: Sequence[int], axes: Tuple[str, ...], *, scale: float = 1.0, fan_in: int | None = None):
+        assert len(shape) == len(axes), (shape, axes)
+        if fan_in is None:
+            # default: last-but-one dim treated as fan-in when 2D+, else 1.0
+            fan_in = shape[-2] if len(shape) >= 2 else 1
+        std = scale / np.sqrt(max(1, fan_in))
+        arr = jax.random.normal(self.next_key(), tuple(shape), dtype=jnp.float32) * std
+        return arr.astype(self.dtype), tuple(axes)
+
+    def zeros(self, shape: Sequence[int], axes: Tuple[str, ...]):
+        assert len(shape) == len(axes)
+        return jnp.zeros(tuple(shape), dtype=self.dtype), tuple(axes)
+
+    def ones(self, shape: Sequence[int], axes: Tuple[str, ...]):
+        assert len(shape) == len(axes)
+        return jnp.ones(tuple(shape), dtype=self.dtype), tuple(axes)
+
+    def constant(self, value, shape: Sequence[int], axes: Tuple[str, ...]):
+        assert len(shape) == len(axes)
+        return jnp.full(tuple(shape), value, dtype=self.dtype), tuple(axes)
+
+
+def split_tree(tree_of_pairs):
+    """Split a tree whose leaves are (array, axes) into (params, axes)."""
+    params = jax.tree_util.tree_map(
+        lambda x: x[0], tree_of_pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+    )
+    axes = jax.tree_util.tree_map(
+        lambda x: x[1], tree_of_pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+    )
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, *, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def act_fn(name: str) -> Callable:
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, *, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(pb: ParamBuilder, vocab: int, d_model: int, *, tie: bool):
+    tree = {"embedding": pb.normal((vocab, d_model), ("vocab", "embed"), fan_in=d_model)}
+    if not tie:
+        tree["unembed"] = pb.normal((d_model, vocab), ("embed", "vocab"), fan_in=d_model)
+    return tree
+
+
+def embed(params, tokens, *, compute_dtype):
+    return jnp.take(params["embedding"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(params, x, *, tie: bool):
+    """Final logits in the compute dtype; losses upcast to fp32 inside the
+    (fusable) reduction so the full fp32 logits tensor is never materialized
+    (the vocab dim is sharded over the `model` axis at scale)."""
+    if tie:
+        w = params["embedding"].astype(x.dtype)
+        return jnp.einsum("...d,vd->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x, params["unembed"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, *, z_loss: float = 0.0):
+    """logits: (..., V); labels: (...) int. Returns mean loss (fp32)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    label_logits = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = logz - label_logits
+    if z_loss:
+        loss = loss + z_loss * jnp.square(logz)
+    return jnp.mean(loss)
+
+
+def moe_load_balance_loss(router_probs, expert_indices, num_experts: int):
+    """Switch-style auxiliary loss: num_experts * sum(f_e * p_e)."""
+    one_hot = jax.nn.one_hot(expert_indices, num_experts, dtype=jnp.float32)  # (..., k, E)
+    tokens_per_expert = jnp.mean(jnp.sum(one_hot, axis=-2), axis=tuple(range(one_hot.ndim - 2)))
+    router_mean = jnp.mean(router_probs, axis=tuple(range(router_probs.ndim - 1)))
+    return num_experts * jnp.sum(tokens_per_expert * router_mean)

@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (mel conv stack) is a STUB per the assignment: inputs are
+precomputed frame embeddings (B, encoder_context, d_model). The encoder is
+bidirectional self-attention; the decoder is causal self-attention +
+cross-attention to the encoder output. Decode shapes lower `serve_step` with
+a self-attention KV cache and precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from .attention import (
+    cross_attention,
+    cross_attention_kv,
+    decode_self_attention,
+    init_attention,
+    init_cross_attention,
+    init_kv_cache,
+    prefill_attention,
+    self_attention,
+)
+from .common import (
+    ParamBuilder,
+    maybe_scan,
+    dtype_of,
+    embed,
+    init_embedding,
+    rms_norm,
+    softmax_cross_entropy,
+    split_tree,
+    unembed,
+)
+from .ffn import ffn, init_ffn
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array):
+    pb = ParamBuilder(key, dtype_of(cfg.param_dtype))
+    d = cfg.d_model
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    tree = {
+        "embed": init_embedding(pb, cfg.vocab_size, cfg.d_model, tie=cfg.tie_embeddings),
+        "enc_pos": pb.normal((cfg.encoder_context, d), ("norm", "embed"), fan_in=d),
+        "encoder": {
+            "ln1": pb.zeros((Le, d), ("layers", "norm")),
+            "attn": init_attention(pb, cfg, Le),
+            "ln2": pb.zeros((Le, d), ("layers", "norm")),
+            "ffn": init_ffn(pb, cfg, Le),
+        },
+        "enc_norm": pb.zeros((d,), ("norm",)),
+        "decoder": {
+            "ln1": pb.zeros((Ld, d), ("layers", "norm")),
+            "attn": init_attention(pb, cfg, Ld),
+            "ln_x": pb.zeros((Ld, d), ("layers", "norm")),
+            "cross": init_cross_attention(pb, cfg, Ld),
+            "ln2": pb.zeros((Ld, d), ("layers", "norm")),
+            "ffn": init_ffn(pb, cfg, Ld),
+        },
+        "final_norm": pb.zeros((d,), ("norm",)),
+    }
+    return split_tree(tree)
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: (B, T, d) stub frame embeddings -> (B, T, d)."""
+    cd = dtype_of(cfg.compute_dtype)
+    h = frames.astype(cd) + params["enc_pos"].astype(cd)[None]
+    enc = params["encoder"]
+
+    def body(carry, p_l):
+        hh = carry
+        attn_in = rms_norm(hh, p_l["ln1"], eps=cfg.norm_eps)
+        hh = hh + self_attention(cfg, p_l["attn"], attn_in, causal=False)
+        ffn_in = rms_norm(hh, p_l["ln2"], eps=cfg.norm_eps)
+        return hh + ffn(cfg, p_l["ffn"], ffn_in), None
+
+    from .transformer import _remat
+
+    h, _ = maybe_scan(cfg, _remat(cfg, body), h, enc)
+    return rms_norm(h, params["enc_norm"], eps=cfg.norm_eps)
+
+
+def _decoder_cross_kv(cfg, params, enc_out):
+    """Precompute per-layer cross K/V: leaves (L, B, T, KV, hd)."""
+    def per_layer(p_l):
+        return cross_attention_kv(cfg, p_l, enc_out)
+
+    return jax.vmap(per_layer, in_axes=0)(params["decoder"]["cross"])
+
+
+def lm_forward(cfg: ArchConfig, params, tokens, frames):
+    """Teacher-forced decode over full token sequence."""
+    cd = dtype_of(cfg.compute_dtype)
+    enc_out = encode(cfg, params, frames)
+    cross_kv = _decoder_cross_kv(cfg, params, enc_out)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    dec = params["decoder"]
+
+    def body(carry, xs):
+        p_l, (ck, cv) = xs
+        hh = carry
+        attn_in = rms_norm(hh, p_l["ln1"], eps=cfg.norm_eps)
+        hh = hh + self_attention(cfg, p_l["attn"], attn_in, causal=True)
+        x_in = rms_norm(hh, p_l["ln_x"], eps=cfg.norm_eps)
+        hh = hh + cross_attention(cfg, p_l["cross"], x_in, (ck, cv))
+        ffn_in = rms_norm(hh, p_l["ln2"], eps=cfg.norm_eps)
+        return hh + ffn(cfg, p_l["ffn"], ffn_in), None
+
+    from .transformer import _remat
+
+    h, _ = maybe_scan(cfg, _remat(cfg, body), h, (dec, cross_kv))
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h, tie=cfg.tie_embeddings), jnp.float32(0.0)
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, frames, *, z_loss: float = 1e-4, **_):
+    logits, _ = lm_forward(cfg, params, tokens, frames)
+    loss = softmax_cross_entropy(logits, labels, z_loss=z_loss)
+    return loss, {"ce_loss": loss, "moe_aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_states(cfg: ArchConfig, batch: int, max_len: int):
+    cd = dtype_of(cfg.compute_dtype)
+    L = cfg.num_layers
+    k0, v0 = init_kv_cache(cfg, batch, max_len, window=0, dtype=cd)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    T = cfg.encoder_context
+    return {
+        "k": jnp.broadcast_to(k0[None], (L,) + k0.shape),
+        "v": jnp.broadcast_to(v0[None], (L,) + v0.shape),
+        "cross_k": jnp.zeros((L, batch, T, KV, hd), dtype=cd),
+        "cross_v": jnp.zeros((L, batch, T, KV, hd), dtype=cd),
+    }
+
+
+def lm_prefill(cfg: ArchConfig, params, tokens, states, frames):
+    """Encode + teacher-forced prefill of decoder prompt tokens."""
+    cd = dtype_of(cfg.compute_dtype)
+    enc_out = encode(cfg, params, frames)
+    cross_kv = _decoder_cross_kv(cfg, params, enc_out)  # (L,B,T,KV,hd) x2
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    dec = params["decoder"]
+
+    def body(carry, xs):
+        p_l, (ck, cv), k, v = xs
+        hh = carry
+        attn_in = rms_norm(hh, p_l["ln1"], eps=cfg.norm_eps)
+        attn_out, (nk, nv) = prefill_attention(cfg, p_l["attn"], attn_in, (k, v))
+        hh = hh + attn_out
+        x_in = rms_norm(hh, p_l["ln_x"], eps=cfg.norm_eps)
+        hh = hh + cross_attention(cfg, p_l["cross"], x_in, (ck, cv))
+        ffn_in = rms_norm(hh, p_l["ln2"], eps=cfg.norm_eps)
+        return hh + ffn(cfg, p_l["ffn"], ffn_in), (nk, nv)
+
+    h, (nk, nv) = maybe_scan(cfg, body, h, (dec, cross_kv, states["k"], states["v"]))
+    new_states = {"k": nk, "v": nv, "cross_k": cross_kv[0].astype(cd), "cross_v": cross_kv[1].astype(cd)}
+    h = rms_norm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings), new_states
+
+
+def lm_decode_step(cfg: ArchConfig, params, states, tokens, pos):
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    dec = params["decoder"]
+
+    def body(carry, xs):
+        p_l, k, v, ck, cv = xs
+        hh = carry
+        attn_in = rms_norm(hh, p_l["ln1"], eps=cfg.norm_eps)
+        attn_out, (nk, nv) = decode_self_attention(cfg, p_l["attn"], attn_in, (k, v), pos)
+        hh = hh + attn_out
+        x_in = rms_norm(hh, p_l["ln_x"], eps=cfg.norm_eps)
+        hh = hh + cross_attention(cfg, p_l["cross"], x_in, (ck, cv))
+        ffn_in = rms_norm(hh, p_l["ln2"], eps=cfg.norm_eps)
+        return hh + ffn(cfg, p_l["ffn"], ffn_in), (nk, nv)
+
+    h, (nk, nv) = maybe_scan(
+        cfg, body, h, (dec, states["k"], states["v"], states["cross_k"], states["cross_v"])
+    )
+    new_states = dict(states, k=nk, v=nv)
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings), new_states

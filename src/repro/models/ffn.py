@@ -1,0 +1,34 @@
+"""Feed-forward layers: classic MLP (gelu) and SwiGLU (silu)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from .common import ParamBuilder, act_fn
+
+
+def init_ffn(pb: ParamBuilder, cfg: ArchConfig, n_layers: Optional[int] = None, *, d_ff: int = 0):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    lead = () if n_layers is None else (n_layers,)
+    lax = () if n_layers is None else ("layers",)
+    tree = {
+        "w_up": pb.normal(lead + (d, f), lax + ("embed", "mlp"), fan_in=d),
+        "w_down": pb.normal(lead + (f, d), lax + ("mlp", "embed"), fan_in=f),
+    }
+    if cfg.act == "silu":  # gated variant
+        tree["w_gate"] = pb.normal(lead + (d, f), lax + ("embed", "mlp"), fan_in=d)
+    return tree
+
+
+def ffn(cfg: ArchConfig, p, x):
+    cd = x.dtype
+    act = act_fn(cfg.act)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cd))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))

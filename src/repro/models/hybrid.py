@@ -1,0 +1,216 @@
+"""zamba2-style hybrid LM: Mamba2 backbone + a single SHARED full-attention
+block applied after every `shared_attn_interval` Mamba layers.
+
+Mamba layers are stacked and scanned in groups of `shared_attn_interval`
+(the shared block's weights are scan-invariant closures); each application
+of the shared block has its OWN KV cache (same weights, different hidden
+stream). long_500k runs for this family: the Mamba state is O(1) in
+sequence length and only the ~L/interval shared-attention applications hold
+full-length KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from .attention import (
+    decode_self_attention,
+    init_attention,
+    init_kv_cache,
+    prefill_attention,
+    self_attention,
+)
+from .common import (
+    ParamBuilder,
+    maybe_scan,
+    dtype_of,
+    embed,
+    init_embedding,
+    rms_norm,
+    softmax_cross_entropy,
+    split_tree,
+    unembed,
+)
+from .ffn import ffn, init_ffn
+from .ssm import init_mamba_block, mamba_forward, mamba_init_state
+from .transformer import _remat
+
+
+def group_structure(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(interval, n_groups, n_tail_layers)."""
+    g = cfg.shared_attn_interval
+    return g, cfg.num_layers // g, cfg.num_layers % g
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array):
+    pb = ParamBuilder(key, dtype_of(cfg.param_dtype))
+    g, n_groups, n_tail = group_structure(cfg)
+    tree = {
+        "embed": init_embedding(pb, cfg.vocab_size, cfg.d_model, tie=cfg.tie_embeddings),
+        "mamba": init_mamba_block(pb, cfg, n_layers=n_groups * g),
+        "shared_attn": {
+            "ln1": pb.zeros((cfg.d_model,), ("norm",)),
+            "attn": init_attention(pb, cfg),
+            "ln2": pb.zeros((cfg.d_model,), ("norm",)),
+            "ffn": init_ffn(pb, cfg),
+        },
+        "final_norm": pb.zeros((cfg.d_model,), ("norm",)),
+    }
+    if n_tail:
+        tree["mamba_tail"] = init_mamba_block(pb, cfg, n_layers=n_tail)
+    return split_tree(tree)
+
+
+def _shared_attn_train(cfg, p, h):
+    attn_in = rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+    h = h + self_attention(cfg, p["attn"], attn_in)
+    ffn_in = rms_norm(h, p["ln2"], eps=cfg.norm_eps)
+    return h + ffn(cfg, p["ffn"], ffn_in)
+
+
+def _reshape_group(params_mamba, n_groups: int, g: int):
+    """(n_groups*g, ...) stacked mamba params -> (n_groups, g, ...)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n_groups, g) + x.shape[1:]), params_mamba
+    )
+
+
+def lm_forward(cfg: ArchConfig, params, tokens):
+    cd = dtype_of(cfg.compute_dtype)
+    g, n_groups, n_tail = group_structure(cfg)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    grouped = _reshape_group(params["mamba"], n_groups, g)
+    shared = params["shared_attn"]
+
+    def group_body(carry, p_group):
+        hh = carry
+        for i in range(g):
+            p_l = jax.tree_util.tree_map(lambda x: x[i], p_group)
+            hh, _ = mamba_forward(cfg, p_l, hh)
+        hh = _shared_attn_train(cfg, shared, hh)
+        return hh, None
+
+    # remat the group body: without it, backward saves every mamba layer's
+    # d_inner-wide intermediates across all n_groups (measured as the
+    # dominant zamba2 train temp term — EXPERIMENTS.md §Perf cell 2).
+    h, _ = maybe_scan(cfg, _remat(cfg, group_body), h, grouped)
+    if n_tail:
+        for i in range(n_tail):
+            p_l = jax.tree_util.tree_map(lambda x: x[i], params["mamba_tail"])
+            h, _ = mamba_forward(cfg, p_l, h)
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h, tie=cfg.tie_embeddings), jnp.float32(0.0)
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, *, z_loss: float = 1e-4, **_):
+    logits, _ = lm_forward(cfg, params, tokens)
+    loss = softmax_cross_entropy(logits, labels, z_loss=z_loss)
+    return loss, {"ce_loss": loss, "moe_aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# serving state: per-layer mamba states + per-application shared-attn KV
+# ---------------------------------------------------------------------------
+
+
+def init_states(cfg: ArchConfig, batch: int, max_len: int):
+    cd = dtype_of(cfg.compute_dtype)
+    g, n_groups, n_tail = group_structure(cfg)
+    one = mamba_init_state(cfg, batch, dtype=jnp.float32, conv_dtype=cd)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None, None], (n_groups, g) + x.shape), one
+    )
+    k0, v0 = init_kv_cache(cfg, batch, max_len, window=0, dtype=cd)
+    state = {
+        "mamba": stacked,
+        "attn_k": jnp.broadcast_to(k0[None], (n_groups,) + k0.shape),
+        "attn_v": jnp.broadcast_to(v0[None], (n_groups,) + v0.shape),
+    }
+    if n_tail:
+        state["mamba_tail"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_tail,) + x.shape), one
+        )
+    return state
+
+
+def lm_prefill(cfg: ArchConfig, params, tokens, states):
+    cd = dtype_of(cfg.compute_dtype)
+    g, n_groups, n_tail = group_structure(cfg)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    grouped = _reshape_group(params["mamba"], n_groups, g)
+    shared = params["shared_attn"]
+
+    def group_body(carry, xs):
+        p_group, m_state, kc, vc = xs
+        hh = carry
+        new_m = []
+        for i in range(g):
+            p_l = jax.tree_util.tree_map(lambda x: x[i], p_group)
+            st = jax.tree_util.tree_map(lambda x: x[i], m_state)
+            hh, ns = mamba_forward(cfg, p_l, hh, state=st)
+            new_m.append(ns)
+        attn_in = rms_norm(hh, shared["ln1"], eps=cfg.norm_eps)
+        attn_out, (nk, nv) = prefill_attention(cfg, shared["attn"], attn_in, (kc, vc))
+        hh = hh + attn_out
+        ffn_in = rms_norm(hh, shared["ln2"], eps=cfg.norm_eps)
+        hh = hh + ffn(cfg, shared["ffn"], ffn_in)
+        stacked_m = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_m)
+        return hh, (stacked_m, nk, nv)
+
+    h, (new_mamba, nk, nv) = maybe_scan(
+        cfg, group_body, h, (grouped, states["mamba"], states["attn_k"], states["attn_v"])
+    )
+    new_states = {"mamba": new_mamba, "attn_k": nk, "attn_v": nv}
+    if n_tail:
+        new_tail = []
+        for i in range(n_tail):
+            p_l = jax.tree_util.tree_map(lambda x: x[i], params["mamba_tail"])
+            st = jax.tree_util.tree_map(lambda x: x[i], states["mamba_tail"])
+            h, ns = mamba_forward(cfg, p_l, h, state=st)
+            new_tail.append(ns)
+        new_states["mamba_tail"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_tail)
+    h = rms_norm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings), new_states
+
+
+def lm_decode_step(cfg: ArchConfig, params, states, tokens, pos):
+    cd = dtype_of(cfg.compute_dtype)
+    g, n_groups, n_tail = group_structure(cfg)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    grouped = _reshape_group(params["mamba"], n_groups, g)
+    shared = params["shared_attn"]
+
+    def group_body(carry, xs):
+        p_group, m_state, kc, vc = xs
+        hh = carry
+        new_m = []
+        for i in range(g):
+            p_l = jax.tree_util.tree_map(lambda x: x[i], p_group)
+            st = jax.tree_util.tree_map(lambda x: x[i], m_state)
+            hh, ns = mamba_forward(cfg, p_l, hh, state=st)
+            new_m.append(ns)
+        attn_in = rms_norm(hh, shared["ln1"], eps=cfg.norm_eps)
+        attn_out, (nk, nv) = decode_self_attention(cfg, shared["attn"], attn_in, (kc, vc), pos)
+        hh = hh + attn_out
+        ffn_in = rms_norm(hh, shared["ln2"], eps=cfg.norm_eps)
+        hh = hh + ffn(cfg, shared["ffn"], ffn_in)
+        stacked_m = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_m)
+        return hh, (stacked_m, nk, nv)
+
+    h, (new_mamba, nk, nv) = maybe_scan(
+        cfg, group_body, h, (grouped, states["mamba"], states["attn_k"], states["attn_v"])
+    )
+    new_states = {"mamba": new_mamba, "attn_k": nk, "attn_v": nv}
+    if n_tail:
+        new_tail = []
+        for i in range(n_tail):
+            p_l = jax.tree_util.tree_map(lambda x: x[i], params["mamba_tail"])
+            st = jax.tree_util.tree_map(lambda x: x[i], states["mamba_tail"])
+            h, ns = mamba_forward(cfg, p_l, h, state=st)
+            new_tail.append(ns)
+        new_states["mamba_tail"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_tail)
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings), new_states

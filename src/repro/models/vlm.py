@@ -1,0 +1,80 @@
+"""PaliGemma-style VLM: stub SigLIP frontend (precomputed patch embeddings)
+projected into the gemma backbone with prefix-LM attention — bidirectional
+within the vision prefix, causal over text.
+
+Per the assignment, only the transformer BACKBONE is specified; the modality
+frontend is a stub whose `input_specs()` provides (B, vision_tokens,
+vision_embed_dim) patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from . import transformer
+from .common import (
+    ParamBuilder,
+    dtype_of,
+    embed,
+    init_embedding,
+    rms_norm,
+    softmax_cross_entropy,
+    split_tree,
+    unembed,
+)
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array):
+    pb = ParamBuilder(key, dtype_of(cfg.param_dtype))
+    proj = {
+        "vision_proj": pb.normal(
+            (cfg.vision_embed_dim, cfg.d_model), ("norm", "embed"), fan_in=cfg.vision_embed_dim
+        )
+    }
+    proj_params, proj_axes = split_tree(proj)
+    bb_params, bb_axes = transformer.init_lm(cfg, jax.random.fold_in(key, 1))
+    params = {**bb_params, **proj_params}
+    axes = {**bb_axes, **proj_axes}
+    return params, axes
+
+
+def _embed_multimodal(cfg: ArchConfig, params, tokens, patches):
+    cd = dtype_of(cfg.compute_dtype)
+    h_vis = jnp.einsum("bpe,ed->bpd", patches.astype(cd), params["vision_proj"].astype(cd))
+    h_txt = embed(params["embed"], tokens, compute_dtype=cd)
+    return jnp.concatenate([h_vis, h_txt], axis=1)
+
+
+def lm_forward(cfg: ArchConfig, params, tokens, patches):
+    """tokens: (B, S_text); patches: (B, P, vision_embed_dim).
+    Returns (text-position logits (B, S_text, V), aux)."""
+    P = cfg.vision_tokens
+    h = _embed_multimodal(cfg, params, tokens, patches)
+    h, aux = transformer.backbone_forward(cfg, params, h, prefix_len=P)
+    logits = unembed(params["embed"], h[:, P:], tie=cfg.tie_embeddings)
+    return logits, aux
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, patches, *, z_loss: float = 1e-4, **_):
+    logits, aux = lm_forward(cfg, params, tokens, patches)
+    loss = softmax_cross_entropy(logits, labels, z_loss=z_loss)
+    return loss, {"ce_loss": loss, "moe_aux": aux}
+
+
+def init_states(cfg: ArchConfig, batch: int, max_len: int):
+    return transformer.init_caches(cfg, batch, max_len)
+
+
+def lm_prefill(cfg: ArchConfig, params, tokens, states, patches):
+    """Prefill over [vision prefix; prompt tokens]."""
+    P = cfg.vision_tokens
+    h = _embed_multimodal(cfg, params, tokens, patches)
+    h, new_caches = transformer.backbone_prefill(cfg, params, h, states, prefix_len=P)
+    h = rms_norm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def lm_decode_step(cfg: ArchConfig, params, states, tokens, pos):
+    return transformer.lm_decode_step(cfg, params, states, tokens, pos)

@@ -1,0 +1,111 @@
+"""xLSTM LM assembly (xlstm-125m): interleaved mLSTM / sLSTM blocks.
+
+Block i is sLSTM when (i+1) % slstm_interval == 0, else mLSTM. Blocks carry
+their own projections (the config's d_ff=0). Layer count is small (12), so
+blocks run as a Python loop rather than a scan; the mLSTM core itself is the
+chunkwise gated-linear-scan kernel.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from .common import (
+    ParamBuilder,
+    dtype_of,
+    embed,
+    init_embedding,
+    rms_norm,
+    softmax_cross_entropy,
+    split_tree,
+    unembed,
+)
+from .ssm import (
+    init_mlstm_block,
+    init_slstm_block,
+    mlstm_forward,
+    mlstm_init_state,
+    slstm_forward,
+    slstm_init_state,
+)
+
+
+def block_kinds(cfg: ArchConfig) -> List[str]:
+    k = cfg.slstm_interval
+    return [
+        "slstm" if (k and (i + 1) % k == 0) else "mlstm" for i in range(cfg.num_layers)
+    ]
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array):
+    pb = ParamBuilder(key, dtype_of(cfg.param_dtype))
+    blocks = []
+    for kind in block_kinds(cfg):
+        if kind == "mlstm":
+            blocks.append(init_mlstm_block(pb, cfg))
+        else:
+            blocks.append(init_slstm_block(pb, cfg))
+    tree = {
+        "embed": init_embedding(pb, cfg.vocab_size, cfg.d_model, tie=cfg.tie_embeddings),
+        "blocks": blocks,
+        "final_norm": pb.zeros((cfg.d_model,), ("norm",)),
+    }
+    return split_tree(tree)
+
+
+def _run_blocks(cfg: ArchConfig, params, h, states):
+    kinds = block_kinds(cfg)
+    new_states = []
+    for i, kind in enumerate(kinds):
+        st = states[i] if states is not None else None
+        if kind == "mlstm":
+            h, ns = mlstm_forward(cfg, params["blocks"][i], h, state=st)
+        else:
+            h, ns = slstm_forward(cfg, params["blocks"][i], h, state=st)
+        new_states.append(ns)
+    return h, new_states
+
+
+def lm_forward(cfg: ArchConfig, params, tokens):
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    h, _ = _run_blocks(cfg, params, h, None)
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h, tie=cfg.tie_embeddings), jnp.float32(0.0)
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, *, z_loss: float = 1e-4, **_):
+    logits, _ = lm_forward(cfg, params, tokens)
+    loss = softmax_cross_entropy(logits, labels, z_loss=z_loss)
+    return loss, {"ce_loss": loss, "moe_aux": jnp.float32(0.0)}
+
+
+def init_states(cfg: ArchConfig, batch: int):
+    states = []
+    for kind in block_kinds(cfg):
+        if kind == "mlstm":
+            states.append(mlstm_init_state(cfg, batch))
+        else:
+            states.append(slstm_init_state(cfg, batch))
+    return states
+
+
+def lm_prefill(cfg: ArchConfig, params, tokens, states):
+    """Recurrent families: prefill = forward carrying states; the 'cache' is
+    the constant-size recurrent state (sub-quadratic by construction)."""
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    h, new_states = _run_blocks(cfg, params, h, states)
+    h = rms_norm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings), new_states
+
+
+def lm_decode_step(cfg: ArchConfig, params, states, tokens, pos):
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+    h, new_states = _run_blocks(cfg, params, h, states)
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+    return unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings), new_states

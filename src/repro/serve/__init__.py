@@ -1,0 +1,2 @@
+"""Serving substrate: batched prefill/decode engine over the model zoo."""
+from . import engine  # noqa: F401

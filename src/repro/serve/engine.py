@@ -1,0 +1,93 @@
+"""Batched serving engine: prefill + greedy decode over the model zoo's
+uniform state protocol, with an HiCR-channel-driven request front door.
+
+The engine core is pure JAX (jitted prefill / decode-step execution units
+dispatched through a HiCR compute manager); `ChannelServer` wires it to an
+MPSC channel so multiple producer instances can submit prompts — the
+paper's Channels frontend doing real work (QoS: request-based, low-latency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends.jaxdev import JaxComputeManager, JaxTopologyManager
+from repro.configs import ShapeConfig
+from repro.models.model_zoo import ModelBundle
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, steps)
+    prefill_logits: np.ndarray  # (B, V)
+
+
+class ServeEngine:
+    def __init__(self, model: ModelBundle, params, *, max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        # execution units through the HiCR compute manager (jaxdev backend).
+        # Prefill must allocate cache headroom up to max_len so decode steps
+        # never write past the cache (model_zoo.make_prefill).
+        prefill_fn = model.make_prefill(max_len) if model.make_prefill else model.prefill
+        self.cpm = JaxComputeManager()
+        self._prefill_unit = self.cpm.create_execution_unit(
+            lambda p, b: prefill_fn(p, b), name="prefill", jit=True
+        )
+        self._decode_unit = self.cpm.create_execution_unit(
+            lambda p, s, b: model.decode_step(p, s, b), name="decode_step", jit=True
+        )
+        topo = JaxTopologyManager().query_topology()
+        self.pu = self.cpm.create_processing_unit(topo.all_compute_resources()[0])
+        self.cpm.initialize(self.pu)
+
+    def _run(self, unit, *args):
+        state = self.cpm.create_execution_state(unit, *args)
+        self.cpm.execute(self.pu, state)
+        self.cpm.await_(self.pu)
+        return state.get_result()
+
+    def generate(self, prompts: np.ndarray, steps: int) -> GenerationResult:
+        """prompts: (B, S) int32. Greedy decode `steps` new tokens."""
+        B, S = prompts.shape
+        logits, state = self._run(self._prefill_unit, self.params, {"tokens": jnp.asarray(prompts)})
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        # cache positions include any multimodal prefix (VLM vision tokens)
+        pos = S + (self.model.cfg.vision_tokens if self.model.cfg.family == "vlm" else 0)
+        for _ in range(steps):
+            out.append(np.asarray(tok)[:, 0])
+            dlogits, state = self._run(
+                self._decode_unit, self.params, state, {"tokens": tok, "pos": jnp.int32(pos)}
+            )
+            tok = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)[:, None]
+            pos += 1
+        return GenerationResult(
+            tokens=np.stack(out, axis=1), prefill_logits=np.asarray(logits)
+        )
+
+
+class ChannelServer:
+    """Consumes JSON requests {'id', 'prompt': [ints], 'steps'} from an MPSC
+    channel consumer and posts replies through a reply channel producer."""
+
+    def __init__(self, engine: ServeEngine, consumer, reply_producer, *, msg_size: int = 1024):
+        self.engine = engine
+        self.consumer = consumer
+        self.reply = reply_producer
+        self.msg_size = msg_size
+
+    def serve(self, n_requests: int):
+        for _ in range(n_requests):
+            raw = self.consumer.pop()
+            req = json.loads(raw.rstrip(b"\0").decode())
+            prompt = np.asarray([req["prompt"]], dtype=np.int32)
+            result = self.engine.generate(prompt, req["steps"])
+            rep = json.dumps({"id": req["id"], "tokens": result.tokens[0].tolist()}).encode()
+            self.reply.push(rep.ljust(self.msg_size, b"\0"))

@@ -1,0 +1,207 @@
+"""Logical-axis partitioning: maps the model zoo's logical parameter axes
+onto mesh axes with automatic divisibility fallback (replicate when an axis
+does not divide), plus input/state sharding heuristics per shape kind.
+
+Parallelism vocabulary (DESIGN.md §5):
+* DP   — batch over ("pod", "data")
+* FSDP — parameter "embed"/"ssm_inner" dims additionally over "data"
+         (ZeRO-3-style; optimizer state follows parameters)
+* TP   — "heads"/"kv_heads"/"mlp"/"vocab" over "model" (Megatron split)
+* EP   — "expert" over "model"
+* SP   — long-context decode KV/sequence over "data" when the batch is
+         unshardable (long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Per-arch parallelism plan: logical axis -> mesh axes."""
+
+    rules: Dict[str, Tuple[str, ...]]
+    fsdp: bool = False
+
+    def axes_for(self, logical: str) -> Tuple[str, ...]:
+        return self.rules.get(logical, ())
+
+
+def default_plan(cfg: ArchConfig, *, fsdp: Optional[bool] = None) -> Plan:
+    if fsdp is None:
+        # rough param-count proxy: FSDP for >= ~2B dense / any MoE giant
+        approx = cfg.num_layers * cfg.d_model * cfg.d_model * 12
+        if cfg.is_moe:
+            approx = cfg.num_layers * cfg.num_experts * cfg.d_model * cfg.expert_d_ff * 3
+        fsdp = approx > 2e9
+    rules = {
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "ssm_inner": ("model",),
+        "expert": ("model",),
+        "embed": ("data",) if fsdp else (),
+        # never sharded: layers/units/norm/head_dim/conv
+    }
+    return Plan(rules=rules, fsdp=fsdp)
+
+
+def _mesh_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def spec_for_leaf(axes: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh, plan: Plan) -> P:
+    """Build a PartitionSpec for one parameter leaf, enforcing divisibility
+    and single-use of each mesh axis."""
+    used: set[str] = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        mesh_axes = tuple(a for a in plan.axes_for(logical) if a in mesh.shape and a not in used)
+        if mesh_axes and dim % _mesh_size(mesh, mesh_axes) == 0:
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_shardings(axes_tree, shape_tree, mesh: Mesh, plan: Plan):
+    """axes_tree: logical-axes tuples per leaf (same structure as params);
+    shape_tree: params or ShapeDtypeStructs. Returns NamedSharding tree."""
+    is_axes = lambda x: isinstance(x, tuple) and all(isinstance(a, str) for a in x)
+
+    def make(axes, leaf):
+        return NamedSharding(mesh, spec_for_leaf(axes, leaf.shape, mesh, plan))
+
+    return jax.tree_util.tree_map(make, axes_tree, shape_tree, is_leaf=lambda x: is_axes(x))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Shard the batch dim over as many DP axes as divide it."""
+    axes = dp_axes(mesh)
+    while axes and batch_size % _mesh_size(mesh, axes) != 0:
+        axes = axes[1:]  # drop the outermost (pod) axis first
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def input_shardings(batch_specs: dict, mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig):
+    """NamedShardings for a train/prefill/decode batch dict."""
+    out = {}
+    for name, sds in batch_specs.items():
+        if sds.ndim == 0:
+            out[name] = NamedSharding(mesh, P())
+            continue
+        bspec = batch_spec(mesh, sds.shape[0])
+        parts = [bspec[0]] + [None] * (sds.ndim - 1)
+        out[name] = NamedSharding(mesh, P(*parts))
+    return out
+
+
+def state_shardings(state_specs, mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig):
+    """Decode/serve state sharding heuristics.
+
+    Per leaf (KV caches, recurrent states), greedily assign:
+      1. the batch dim (== global_batch) to the DP axes,
+      2. a heads-like dim (== num_heads or num_kv_heads) to "model",
+      3. if batch was unshardable, the sequence dim (>= 4096) to "data" (SP).
+    All subject to divisibility; everything else replicated.
+    """
+    B = shape.global_batch
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    data_sz = mesh.shape.get("data", 1)
+    model_sz = mesh.shape.get("model", 1)
+    dpx = dp_axes(mesh)
+    dp_sz = _mesh_size(mesh, dpx)
+
+    def leaf_spec(sds):
+        parts: list = [None] * sds.ndim
+        used_batch = False
+        used_model = False
+        # 1. batch dim
+        for i, d in enumerate(sds.shape):
+            if d == B and d % dp_sz == 0 and dp_sz > 1:
+                parts[i] = dpx if len(dpx) > 1 else dpx[0]
+                used_batch = True
+                break
+        # 2. heads dim — POSITIONAL: KV caches are (..., S, KV, hd), so the
+        #    heads dim is ndim-2. (A value-based search misfires when a
+        #    stacked-layers dim happens to equal num_heads: minitron's L=32
+        #    == H=32 got the layers dim model-sharded, forcing XLA into
+        #    involuntary full rematerialization of the cache each step.)
+        hi = sds.ndim - 2
+        if (sds.ndim >= 3 and parts[hi] is None and sds.shape[hi] in (H, KV)
+                and sds.shape[hi] % model_sz == 0 and model_sz > 1):
+            parts[hi] = "model"
+            used_model = True
+        # 2b. heads that do NOT divide the model axis (GQA kv=8 on model=16)
+        #     would force full cache replication: shard the SEQUENCE dim
+        #     (ndim-3) over "model" instead (flash-decode partial softmax;
+        #     GSPMD inserts the cross-shard combine). Baseline measured
+        #     64 GiB of per-step all-gather on grok decode_32k from this.
+        si = sds.ndim - 3
+        if (not used_model and model_sz > 1 and sds.ndim >= 3 and parts[si] is None
+                and sds.shape[si] >= 4096 and sds.shape[si] % model_sz == 0):
+            parts[si] = "model"
+            used_model = True
+        # 3. sequence parallel fallback for unshardable batch
+        if not used_batch and data_sz > 1:
+            for i, d in enumerate(sds.shape):
+                if parts[i] is None and d >= 4096 and d % data_sz == 0:
+                    parts[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(leaf_spec, state_specs)
+
+
+def opt_state_shardings(opt_specs, params_specs, param_shardings_tree, mesh: Mesh):
+    """Optimizer state follows parameter sharding (ZeRO): exact-shape leaves
+    reuse the param spec; Adafactor's factored stats drop the reduced dim."""
+    flat_params = {
+        tuple(path): (leaf, shard)
+        for (path, leaf), (_, shard) in zip(
+            jax.tree_util.tree_flatten_with_path(params_specs)[0],
+            jax.tree_util.tree_flatten_with_path(param_shardings_tree)[0],
+        )
+    }
+
+    by_shape: Dict[Tuple, list] = {}
+    for leaf, shard in flat_params.values():
+        by_shape.setdefault(tuple(leaf.shape), []).append(shard)
+
+    def match(sds):
+        shape = tuple(sds.shape)
+        if shape in by_shape:
+            return by_shape[shape][0]
+        # factored stats: param shape minus last / minus second-to-last dim
+        for pshape, shards in by_shape.items():
+            spec = shards[0].spec
+            padded = tuple(spec) + (None,) * (len(pshape) - len(spec))
+            if len(pshape) >= 2 and shape == pshape[:-1]:
+                return NamedSharding(mesh, P(*padded[:-1]))
+            if len(pshape) >= 2 and shape == pshape[:-2] + pshape[-1:]:
+                return NamedSharding(mesh, P(*(padded[:-2] + padded[-1:])))
+        return NamedSharding(mesh, P())  # scalars / counts
+
+    return jax.tree_util.tree_map(match, opt_specs)
+
+
+def with_shardings(specs, shardings):
+    """Attach NamedShardings to ShapeDtypeStructs (dry-run inputs)."""
+
+    def attach(sds, sh):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map(attach, specs, shardings)

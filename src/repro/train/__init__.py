@@ -1,0 +1,3 @@
+"""Training substrate: optimizers, train step, data pipeline, checkpointing,
+gradient compression."""
+from . import checkpoint, compression, data, optimizer, train_step  # noqa: F401

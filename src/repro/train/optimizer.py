@@ -1,0 +1,188 @@
+"""Functional optimizers: AdamW and Adafactor, with global-norm clipping and
+a warmup+cosine schedule. Optimizer state mirrors the parameter tree, so the
+same logical-axis sharding rules apply (ZeRO-style state sharding for free).
+
+Adafactor (factored second moment) is the default for ≥100B-parameter archs:
+it cuts optimizer state from 8 to ~4 bytes/param, which is what makes the
+trillion-parameter config representable on a 512-chip fleet (EXPERIMENTS.md
+§Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # adamw | adafactor
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_dims_min: int = 2  # factor second moment for >=2D params
+
+
+def schedule(cfg: OptimizerConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cosine = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cosine
+    return cfg.learning_rate * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, clip: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(cfg: OptimizerConfig, params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, n, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        n_new = b2 * n + (1 - b2) * jnp.square(g32)
+        m_hat = m_new / (1 - b1 ** count.astype(jnp.float32))
+        n_hat = n_new / (1 - b2 ** count.astype(jnp.float32))
+        step = m_hat / (jnp.sqrt(n_hat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, n_new
+
+    out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"], params)
+    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_triple)
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_triple)
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is_triple)
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no first moment by default)
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(cfg: OptimizerConfig, params):
+    def per_param(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {
+        "v": jax.tree_util.tree_map(per_param, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    beta2 = 1.0 - count.astype(jnp.float32) ** (-cfg.decay_rate)
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if _factored(p):
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :] / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30)
+            )
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            nv = beta2 * v["v"] + (1 - beta2) * g2
+            denom = jnp.sqrt(nv)
+            new_v = {"v": nv}
+        update = g32 / jnp.maximum(denom, 1e-30)
+        # RMS-clipped update (Adafactor's d=1 clipping)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        new_p = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_v
+
+    is_vdict = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_p = jax.tree_util.tree_leaves(params)
+    new_p, new_v = [], []
+    for g, v, p in zip(flat_g, flat_v, flat_p):
+        np_, nv_ = upd(g, v, p)
+        new_p.append(np_)
+        new_v.append(nv_)
+    return (
+        jax.tree_util.tree_unflatten(tdef, new_p),
+        {"v": jax.tree_util.tree_unflatten(tdef, new_v), "count": count},
+    )
+
+
+# ---------------------------------------------------------------------------
+# uniform interface
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: OptimizerConfig, params):
+    if cfg.name == "adamw":
+        return adamw_init(cfg, params)
+    if cfg.name == "adafactor":
+        return adafactor_init(cfg, params)
+    raise KeyError(cfg.name)
+
+
+def update(cfg: OptimizerConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.name == "adamw":
+        new_params, new_state = adamw_update(cfg, grads, state, params)
+    elif cfg.name == "adafactor":
+        new_params, new_state = adafactor_update(cfg, grads, state, params)
+    else:
+        raise KeyError(cfg.name)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": schedule(cfg, new_state["count"])}
+
+
+def for_arch(arch_params_bytes: int) -> OptimizerConfig:
+    """Heuristic: factored states for very large models."""
+    if arch_params_bytes > 50e9:
+        return OptimizerConfig(name="adafactor")
+    return OptimizerConfig(name="adamw")

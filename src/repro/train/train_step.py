@@ -1,0 +1,112 @@
+"""Train-step factory: loss → grad → (optional microbatch accumulation) →
+clip → optimizer update, as one SPMD program.
+
+Gradient averaging across the data axes is implicit: the loss is a mean over
+the globally-sharded batch, so GSPMD inserts the reduce-scatter/all-reduce
+matching the parameter sharding (the HiCR communication-manager semantics at
+trace level — see backends/spmd.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelBundle
+from . import optimizer as opt_lib
+from .compression import compress_decompress
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    grad_compression: Optional[str] = None  # None | "int8_ef"
+
+
+def make_train_step(
+    model: ModelBundle,
+    opt_cfg: opt_lib.OptimizerConfig,
+    train_cfg: TrainConfig = TrainConfig(),
+    *,
+    mesh=None,
+) -> Callable:
+    """Returns train_step(params, opt_state, ef_state, batch) ->
+    (params, opt_state, ef_state, metrics).
+
+    `mesh` (optional): when microbatching under SPMD, each microbatch slice
+    is re-constrained to the batch sharding. Without the constraint, GSPMD
+    loses the batch sharding through the (k, B/k, ...) reshape and
+    replicates every microbatch on every data row — k× the per-device
+    FLOPs (measured; see EXPERIMENTS.md §Perf)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain_micro(micro):
+        if mesh is None:
+            return micro
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.sharding.partition import batch_spec
+
+        def leaf(x):
+            if getattr(x, "ndim", 0) < 1:
+                return x
+            spec = batch_spec(mesh, x.shape[0])
+            sh = NamedSharding(mesh, P(spec[0], *([None] * (x.ndim - 1))))
+            return jax.lax.with_sharding_constraint(x, sh)
+
+        return jax.tree_util.tree_map(leaf, micro)
+
+    def compute_grads(params, batch):
+        k = train_cfg.microbatches
+        if k <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        # microbatch accumulation: split the (global) batch leading dim
+        def reshape(x):
+            return x.reshape((k, x.shape[0] // k) + x.shape[1:]) if getattr(x, "ndim", 0) >= 1 else x
+
+        mb = jax.tree_util.tree_map(reshape, batch)
+
+        # Python-loop accumulation (k is small): exact cost_analysis and lets
+        # XLA overlap the microbatches' collectives with compute.
+        loss = jnp.float32(0.0)
+        metrics = {"ce_loss": jnp.float32(0.0), "moe_aux": jnp.float32(0.0)}
+        grads = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        for i in range(k):
+            micro = _constrain_micro(jax.tree_util.tree_map(lambda x: x[i], mb))
+            (l_i, m_i), g_i = grad_fn(params, micro)
+            loss = loss + l_i
+            metrics = jax.tree_util.tree_map(jnp.add, metrics, m_i)
+            grads = jax.tree_util.tree_map(jnp.add, grads, g_i)
+        inv = 1.0 / k
+        return (
+            loss * inv,
+            jax.tree_util.tree_map(lambda m: m * inv, metrics),
+            jax.tree_util.tree_map(lambda g: g * inv, grads),
+        )
+
+    def train_step(params, opt_state, ef_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if train_cfg.grad_compression == "int8_ef":
+            grads, ef_state = compress_decompress(grads, ef_state)
+        new_params, new_opt_state, opt_metrics = opt_lib.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt_state, ef_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: ModelBundle, opt_cfg: opt_lib.OptimizerConfig, key, *, train_cfg: TrainConfig = TrainConfig()):
+    params, axes = model.init(key)
+    opt_state = opt_lib.init(opt_cfg, params)
+    ef_state = None
+    if train_cfg.grad_compression == "int8_ef":
+        ef_state = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return params, axes, opt_state, ef_state

@@ -1,0 +1,24 @@
+"""Shared pytest fixtures.
+
+NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and benches
+must see the real single CPU device. Dry-run tests that need 512 placeholder
+devices run ``repro.launch.dryrun`` in a subprocess (it sets the flag itself
+before any jax import).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def tmp_ckpt_dir(tmp_path):
+    return str(tmp_path / "ckpt")

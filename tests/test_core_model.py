@@ -1,0 +1,204 @@
+"""HiCR model semantics (paper §3): component groups, operation legality,
+serialization, and the backend capability table (paper Table 1)."""
+import pytest
+
+from repro.core.definitions import (
+    InvalidMemcpyDirectionError,
+    LifetimeError,
+    MemcpyDirection,
+    UnsupportedOperationError,
+)
+from repro.core.managers import CommunicationManager
+from repro.core.registry import available_backends, build, capability_table, get_backend
+from repro.core.stateful import ExecutionState, GlobalMemorySlot, Instance, LocalMemorySlot
+from repro.core.stateless import (
+    ComputeResource,
+    Device,
+    ExecutionUnit,
+    InstanceTemplate,
+    MemorySpace,
+    Topology,
+)
+
+
+def _space(size=1024):
+    return MemorySpace(kind="host_ram", index=0, device_id="d0", size_bytes=size)
+
+
+def _local(size=64):
+    return LocalMemorySlot(_space(), size, bytearray(size))
+
+
+def _global(size=64):
+    return GlobalMemorySlot(tag=1, key=0, owner_instance_id="inst-0", local_slot=None, size_bytes=size)
+
+
+# ---------------------------------------------------------------------------
+# memcpy direction rules (paper §3.1.4)
+# ---------------------------------------------------------------------------
+
+
+class TestMemcpyDirections:
+    def test_local_to_local(self):
+        assert CommunicationManager.classify(_local(), _local()) == MemcpyDirection.LOCAL_TO_LOCAL
+
+    def test_local_to_global(self):
+        assert CommunicationManager.classify(_local(), _global()) == MemcpyDirection.LOCAL_TO_GLOBAL
+
+    def test_global_to_local(self):
+        assert CommunicationManager.classify(_global(), _local()) == MemcpyDirection.GLOBAL_TO_LOCAL
+
+    def test_global_to_global_forbidden(self):
+        """G2G entails communication between two remote instances, neither of
+        which orchestrates the operation — the model forbids it."""
+        with pytest.raises(InvalidMemcpyDirectionError):
+            CommunicationManager.classify(_global(), _global())
+
+
+# ---------------------------------------------------------------------------
+# stateless components: copyable, serializable (paper §3.1)
+# ---------------------------------------------------------------------------
+
+
+class TestStateless:
+    def test_memory_space_nonzero_size(self):
+        with pytest.raises(ValueError):
+            MemorySpace(kind="host_ram", index=0, device_id="d0", size_bytes=0)
+
+    def test_topology_serialize_roundtrip(self):
+        topo = Topology(
+            devices=(
+                Device(
+                    device_id="tpu-0",
+                    kind="tpu",
+                    compute_resources=(
+                        ComputeResource(kind="tpu_tensorcore", index=0, device_id="tpu-0",
+                                        peak_flops_bf16=1.97e14),
+                    ),
+                    memory_spaces=(
+                        MemorySpace(kind="device_hbm", index=0, device_id="tpu-0",
+                                    size_bytes=16 << 30, bandwidth_bytes_per_s=8.19e11),
+                    ),
+                    attributes={"pod": 0},
+                ),
+            )
+        )
+        again = Topology.deserialize(topo.serialize())
+        assert again.get_devices()[0].device_id == "tpu-0"
+        assert again.all_compute_resources()[0].peak_flops_bf16 == pytest.approx(1.97e14)
+        assert again.total_memory_bytes("device_hbm") == 16 << 30
+
+    def test_topology_merge_dedups_by_device_id(self):
+        d = Device(device_id="x", kind="cpu")
+        merged = Topology(devices=(d,)).merge(Topology(devices=(d, Device(device_id="y", kind="cpu"))))
+        assert {dev.device_id for dev in merged.get_devices()} == {"x", "y"}
+
+    def test_execution_unit_replicate(self):
+        unit = ExecutionUnit(name="f", format="python-callable", fn=lambda: 42)
+        clone = unit.replicate()
+        assert clone.fn() == 42 and clone.name == "f"
+
+    def test_instance_template_satisfaction(self):
+        topo = Topology(
+            devices=(
+                Device(
+                    device_id="d",
+                    kind="cpu",
+                    compute_resources=tuple(
+                        ComputeResource(kind="cpu_core", index=i, device_id="d") for i in range(4)
+                    ),
+                    memory_spaces=(_space(1 << 30),),
+                ),
+            )
+        )
+        assert topo.satisfies(InstanceTemplate(min_compute_resources=4))
+        assert not topo.satisfies(InstanceTemplate(min_compute_resources=5))
+        assert not topo.satisfies(InstanceTemplate(min_memory_bytes=2 << 30))
+        assert topo.satisfies(InstanceTemplate(required_device_kinds=("cpu",)))
+        assert not topo.satisfies(InstanceTemplate(required_device_kinds=("tpu",)))
+
+    def test_template_roundtrip(self):
+        t = InstanceTemplate(min_compute_resources=2, min_memory_bytes=99,
+                             required_device_kinds=("tpu",), metadata={"zone": "a"})
+        again = InstanceTemplate.from_dict(t.to_dict())
+        assert again == t
+
+
+# ---------------------------------------------------------------------------
+# stateful components: unique, finite lifetime (paper §3.1)
+# ---------------------------------------------------------------------------
+
+
+class TestStateful:
+    def test_execution_state_cannot_be_reused(self):
+        unit = ExecutionUnit(name="f", format="python-callable", fn=lambda: 1)
+        st = ExecutionState(unit)
+        st.mark_finished(result=1)
+        with pytest.raises(LifetimeError):
+            st.mark_executing()
+
+    def test_execution_state_result_and_error(self):
+        unit = ExecutionUnit(name="f", format="python-callable", fn=lambda: 1)
+        st = ExecutionState(unit)
+        with pytest.raises(LifetimeError):
+            st.get_result()  # not finished yet
+        st.mark_finished(error=ValueError("boom"))
+        with pytest.raises(ValueError):
+            st.get_result()
+
+    def test_freed_slot_is_dead(self):
+        slot = _local()
+        slot.freed = True
+        with pytest.raises(LifetimeError):
+            slot.check_alive()
+
+    def test_root_is_tiebreak_only(self):
+        a, b = Instance("inst-0", is_root=True), Instance("inst-1")
+        assert a.is_root() and not b.is_root()
+        # semantically equivalent otherwise: both start RUNNING
+        assert a.status == b.status
+
+
+# ---------------------------------------------------------------------------
+# backend registry: the paper's Table 1 mechanism
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_builtin_backends_present(self):
+        names = available_backends()
+        for expected in ("hostcpu", "coroutine", "jaxdev", "localsim", "spmd", "tpu_spec"):
+            assert expected in names
+
+    def test_capability_table_shape(self):
+        """Our analogue of paper Table 1: every backend implements a strict
+        subset of the five roles; no backend implements none."""
+        table = capability_table()
+        for name, row in table.items():
+            assert set(row) == {"topology", "instance", "communication", "memory", "compute"}
+            assert any(row.values()), f"backend {name} implements no role"
+
+    def test_capability_matrix_expected_rows(self):
+        table = capability_table()
+        assert table["hostcpu"] == {
+            "topology": True, "instance": False, "communication": True,
+            "memory": True, "compute": True,
+        }
+        assert table["coroutine"]["compute"] and not table["coroutine"]["topology"]
+        assert table["tpu_spec"] == {
+            "topology": True, "instance": False, "communication": False,
+            "memory": False, "compute": False,
+        }
+
+    def test_build_unknown_role_rejected(self):
+        with pytest.raises(KeyError):
+            build("coroutine", "communication")
+
+    def test_build_instantiates(self):
+        tm = build("hostcpu", "topology")
+        topo = tm.query_topology()
+        assert len(topo.all_compute_resources()) >= 1
+
+    def test_unknown_backend(self):
+        with pytest.raises(KeyError):
+            get_backend("cuda")

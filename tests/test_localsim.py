@@ -1,0 +1,240 @@
+"""localsim backend: the MPI/LPF analog — N thread instances over an
+in-process fabric with one-sided put/get, collective exchange, fencing, and
+elastic instance creation (paper §3.1.1, §3.1.4, Fig. 7)."""
+import numpy as np
+import pytest
+
+from repro.backends.localsim import LocalSimWorld
+from repro.core.definitions import HiCRError, InvalidMemcpyDirectionError
+from repro.core.stateless import InstanceTemplate
+
+
+def test_world_launch_collects_results():
+    w = LocalSimWorld(4)
+    results = w.launch(lambda mgrs, rank: rank * 10)
+    assert results == {i: i * 10 for i in range(4)}
+    w.shutdown()
+
+
+def test_exactly_one_root_instance():
+    w = LocalSimWorld(3)
+
+    def prog(mgrs, rank):
+        im = mgrs.instance_manager
+        roots = [i for i in im.get_instances() if i.is_root()]
+        assert len(roots) == 1
+        assert im.get_root_instance().instance_id == "inst-0"
+        return im.get_current_instance().is_root()
+
+    results = w.launch(prog)
+    assert results == {0: True, 1: False, 2: False}
+    w.shutdown()
+
+
+@pytest.mark.parametrize("mode", ["rdma", "rendezvous"])
+def test_one_sided_put_get_both_fabric_modes(mode):
+    """The same HiCR program must produce identical results on both fabric
+    personalities (the paper's Fig. 8 point: backend swap, same semantics)."""
+
+    def prog(mgrs, rank):
+        mm, cm = mgrs.memory_manager, mgrs.communication_manager
+        space = mm.memory_spaces()[0]
+        mine = mm.allocate_local_memory_slot(space, 8)
+        mine.handle[:] = np.full(8, rank + 1, dtype=np.uint8)
+        # everyone volunteers one slot under their own key
+        gslots = cm.exchange_global_memory_slots(7, {rank: mine})
+        assert set(gslots) == {0, 1}
+        # rank 0 PUTs into rank 1's slot; rank 1 GETs rank 0's slot
+        if rank == 0:
+            src = mm.allocate_local_memory_slot(space, 8)
+            src.handle[:] = np.arange(8, dtype=np.uint8)
+            cm.memcpy(gslots[1], 0, src, 0, 8)
+            cm.fence(7)
+        else:
+            dst = mm.allocate_local_memory_slot(space, 8)
+            cm.memcpy(dst, 0, gslots[0], 0, 8)
+            cm.fence(7)
+            assert bytes(dst.handle) == bytes([1] * 8)
+        return True
+
+    w = LocalSimWorld(2, mode=mode)
+    w.launch(prog)
+
+    def verify(mgrs, rank):
+        if rank == 1:
+            # note: verification happens in a second phase so the PUT from
+            # rank 0 has been fenced globally.
+            pass
+        return True
+
+    w.launch(verify)
+    w.shutdown()
+
+
+def test_put_lands_in_remote_buffer():
+    box = {}
+
+    def prog(mgrs, rank):
+        mm, cm = mgrs.memory_manager, mgrs.communication_manager
+        space = mm.memory_spaces()[0]
+        mine = mm.allocate_local_memory_slot(space, 4)
+        gslots = cm.exchange_global_memory_slots(3, {rank: mine})
+        if rank == 0:
+            src = mm.allocate_local_memory_slot(space, 4)
+            src.handle[:] = np.array([9, 8, 7, 6], dtype=np.uint8)
+            cm.memcpy(gslots[1], 0, src, 0, 4)
+            cm.fence(3)
+        # barrier via a second collective exchange so rank 1 reads after the put
+        cm.exchange_global_memory_slots(4, {})
+        if rank == 1:
+            box["got"] = bytes(mine.handle[:4])
+        return True
+
+    w = LocalSimWorld(2)
+    w.launch(prog)
+    assert box["got"] == bytes([9, 8, 7, 6])
+    w.shutdown()
+
+
+def test_exchange_tag_key_addressing():
+    """Global slots are addressed by (tag, key); the same key under a
+    different tag is a different slot (paper §3.1.4)."""
+
+    def prog(mgrs, rank):
+        mm, cm = mgrs.memory_manager, mgrs.communication_manager
+        space = mm.memory_spaces()[0]
+        a = mm.allocate_local_memory_slot(space, 4)
+        b = mm.allocate_local_memory_slot(space, 4)
+        a.handle[:] = np.full(4, 10 + rank, np.uint8)
+        b.handle[:] = np.full(4, 20 + rank, np.uint8)
+        g1 = cm.exchange_global_memory_slots(100, {rank: a})
+        g2 = cm.exchange_global_memory_slots(200, {rank: b})
+        dst = mm.allocate_local_memory_slot(space, 4)
+        other = 1 - rank
+        cm.memcpy(dst, 0, g1[other], 0, 4)
+        cm.fence(100)
+        assert bytes(dst.handle[:1]) == bytes([10 + other])
+        cm.memcpy(dst, 0, g2[other], 0, 4)
+        cm.fence(200)
+        assert bytes(dst.handle[:1]) == bytes([20 + other])
+        return True
+
+    w = LocalSimWorld(2)
+    w.launch(prog)
+    w.shutdown()
+
+
+def test_duplicate_key_in_exchange_rejected():
+    """Keys within one exchange tag must be unique — the (tag, key) pair
+    identifies the resulting global slot (paper §3.1.4). A violation poisons
+    the collective: EVERY participant raises (none is left in the barrier)."""
+
+    def prog(mgrs, rank):
+        mm, cm = mgrs.memory_manager, mgrs.communication_manager
+        space = mm.memory_spaces()[0]
+        s = mm.allocate_local_memory_slot(space, 4)
+        with pytest.raises(HiCRError, match="duplicate key"):
+            # both ranks volunteer key 0 under tag 55
+            cm.exchange_global_memory_slots(55, {0: s})
+        return True
+
+    w = LocalSimWorld(2)
+    results = w.launch(prog)
+    assert results == {0: True, 1: True}
+    w.shutdown()
+
+
+def test_duplicate_direct_registration_rejected():
+    def prog(mgrs, rank):
+        mm, cm = mgrs.memory_manager, mgrs.communication_manager
+        space = mm.memory_spaces()[0]
+        s = mm.allocate_local_memory_slot(space, 4)
+        cm.register_global_slot(77, 0, s)
+        with pytest.raises(HiCRError):
+            cm.register_global_slot(77, 0, s)
+        return True
+
+    w = LocalSimWorld(1)
+    w.launch(prog)
+    w.shutdown()
+
+
+def test_g2g_memcpy_forbidden_at_backend_level():
+    def prog(mgrs, rank):
+        mm, cm = mgrs.memory_manager, mgrs.communication_manager
+        space = mm.memory_spaces()[0]
+        s = mm.allocate_local_memory_slot(space, 4)
+        gslots = cm.exchange_global_memory_slots(9, {rank: s})
+        with pytest.raises(InvalidMemcpyDirectionError):
+            cm.memcpy(gslots[0], 0, gslots[1], 0, 4)
+        return True
+
+    w = LocalSimWorld(2)
+    w.launch(prog)
+    w.shutdown()
+
+
+def test_elastic_instance_creation_fig7():
+    """The paper's Fig. 7: root tops up the world to `desired` instances at
+    runtime from a template; new instances run the entry function and join
+    collectives (dynamic barrier)."""
+    desired = 4
+    seen = []
+
+    def entry(mgrs, rank):
+        seen.append(rank)
+        return f"hello-{rank}"
+
+    w = LocalSimWorld(2, entry_fn=entry)
+
+    def prog(mgrs, rank):
+        im = mgrs.instance_manager
+        if not im.get_current_instance().is_root():
+            return "non-root"
+        current = len(im.get_instances())
+        if current >= desired:
+            return "enough"
+        temp = im.create_instance_template(min_compute_resources=1)
+        created = im.create_instances(desired - current, temp)
+        assert len(created) == desired - current
+        return "created"
+
+    results = w.launch(prog)
+    assert results[0] == "created"
+    elastic = w.join_elastic()
+    assert elastic[2] == "hello-2" and elastic[3] == "hello-3"
+    assert len(w.instances) == desired
+    # still exactly one root
+    assert sum(1 for i in w.instances if i.is_root()) == 1
+    w.shutdown()
+
+
+def test_elastic_rejects_unsatisfiable_template():
+    w = LocalSimWorld(1, entry_fn=lambda m, r: None)
+
+    def prog(mgrs, rank):
+        im = mgrs.instance_manager
+        temp = InstanceTemplate(min_memory_bytes=1 << 60)  # an exabyte
+        with pytest.raises(HiCRError):
+            im.create_instances(1, temp)
+        return True
+
+    w.launch(prog)
+    w.shutdown()
+
+
+def test_message_path_for_rpc():
+    def prog(mgrs, rank):
+        im = mgrs.instance_manager
+        if rank == 0:
+            im.send_message(im.get_instances()[1], b"ping")
+            return im.recv_message(timeout=5)
+        msg = im.recv_message(timeout=5)
+        im.send_message(im.get_instances()[0], b"pong:" + msg)
+        return msg
+
+    w = LocalSimWorld(2)
+    results = w.launch(prog)
+    assert results[1] == b"ping"
+    assert results[0] == b"pong:ping"
+    w.shutdown()

@@ -1,0 +1,161 @@
+"""Roofline extraction layer: HLO collective parser on synthetic modules,
+Roofline term arithmetic, MODEL_FLOPS, and a small-mesh dry-run subprocess
+(the 512-device flag must stay OUT of this process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.backends.tpu_spec import V5E
+from repro.configs import ShapeConfig, get_config
+from repro.launch import roofline as rl
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class TestCollectiveParser:
+    def test_sums_collective_bytes(self):
+        hlo = """
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256] parameter(0)
+  %ag = f32[256,256] all-gather(%a), dimensions={0}
+  %ar = f32[128,256] all-reduce(%a), to_apply=%sum
+  ROOT %r = f32[128,256] add(%ar, %ar)
+}
+"""
+        out = rl.collective_bytes(hlo)
+        assert out["all-gather"] == 256 * 256 * 4
+        assert out["all-reduce"] == 128 * 256 * 4
+        assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+    def test_bf16_and_async_start_variants(self):
+        hlo = """
+ENTRY %main (a: bf16[64,64]) -> bf16[64,64] {
+  %a = bf16[64,64] parameter(0)
+  %rs = bf16[32,64] reduce-scatter(%a), dimensions={0}
+  %cp = bf16[64,64] collective-permute-start(%a), source_target_pairs={{0,1}}
+  ROOT %r = bf16[64,64] copy(%a)
+}
+"""
+        out = rl.collective_bytes(hlo)
+        assert out["reduce-scatter"] == 32 * 64 * 2
+        assert out["collective-permute"] == 64 * 64 * 2
+
+    def test_while_body_amplification(self):
+        """Collectives inside scan bodies execute trip_count times."""
+        hlo = """
+%body (p: (s32[], f32[16,16])) -> (s32[], f32[16,16]) {
+  %p = (s32[], f32[16,16]) parameter(0)
+  %x = f32[16,16] get-tuple-element(%p), index=1
+  %ar = f32[16,16] all-reduce(%x), to_apply=%sum
+  ROOT %t = (s32[], f32[16,16]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[16,16])) -> pred[] {
+  %p = (s32[], f32[16,16]) parameter(0)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[16,16]) -> f32[16,16] {
+  %init = (s32[], f32[16,16]) tuple(%zero, %x)
+  %w = (s32[], f32[16,16]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[16,16] get-tuple-element(%w), index=1
+}
+"""
+        once = rl.collective_bytes(hlo, default_trip_count=1)
+        many = rl.collective_bytes(hlo, default_trip_count=26)
+        assert many["all-reduce"] == 26 * once["all-reduce"]
+
+    def test_no_collectives_is_zero(self):
+        assert rl.collective_bytes("ENTRY %m (x: f32[4]) -> f32[4] {\n}")["total"] == 0.0
+
+
+class TestRooflineTerms:
+    def test_term_arithmetic_matches_assignment_formulas(self):
+        r = rl.Roofline(
+            flops_per_device=1.97e14,        # exactly one second of compute
+            bytes_per_device=8.19e11,        # exactly one second of HBM
+            collective_bytes_per_device=5.0e10,  # exactly one second of ICI
+            chips=256, chip=V5E,
+        )
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(1.0)
+        assert r.collective_s == pytest.approx(1.0)
+
+    def test_dominant_term(self):
+        r = rl.Roofline(1e12, 8.19e11 * 5, 0.0, chips=1, chip=V5E)
+        assert r.dominant == "memory"
+        assert r.bound_s == pytest.approx(5.0)
+
+    def test_model_flops_train_vs_decode(self):
+        cfg = get_config("gemma3-1b")
+        train = ShapeConfig("t", 4096, 256, "train")
+        decode = ShapeConfig("d", 32768, 128, "decode")
+        n = 1_000_000_000
+        assert rl.model_flops(cfg, train, n_params=n) == pytest.approx(6.0 * n * 4096 * 256)
+        # decode: one token per sequence, forward-only
+        assert rl.model_flops(cfg, decode, n_params=n) == pytest.approx(2.0 * n * 128)
+
+    def test_model_flops_moe_uses_active_params(self):
+        cfg = get_config("grok-1-314b")
+        shape = ShapeConfig("t", 128, 8, "train")
+        full = rl.model_flops(cfg, shape, n_params=100, n_active_params=None)
+        active = rl.model_flops(cfg, shape, n_params=100, n_active_params=30)
+        assert active == pytest.approx(full * 0.3)
+
+
+@pytest.mark.slow
+class TestDryRunSubprocess:
+    """Full lower+compile on small multi-device meshes, in a subprocess so
+    the XLA device-count override cannot leak into this test session."""
+
+    def _run(self, *args):
+        env = dict(os.environ, PYTHONPATH=SRC)
+        return subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", *args],
+            capture_output=True, text=True, timeout=900, env=env,
+        )
+
+    def test_single_cell_single_pod_mesh(self, tmp_path):
+        r = self._run("--arch", "gemma3-1b", "--shape", "decode_32k",
+                      "--mesh", "4x4", "--json", str(tmp_path))
+        assert r.returncode == 0, r.stdout + r.stderr
+        rec = json.loads((tmp_path / "gemma3-1b__decode_32k__4x4.json").read_text())
+        roof = rec["roofline"]
+        assert roof["flops_per_device"] > 0
+        assert roof["bytes_per_device"] > 0
+        assert roof["dominant"] in ("compute", "memory", "collective")
+        assert rec["memory"]["argument_size_in_bytes"] > 0
+
+    def test_single_cell_multi_pod_mesh(self, tmp_path):
+        """The pod axis must shard: 2x2x2 (pod, data, model)."""
+        r = self._run("--arch", "xlstm-125m", "--shape", "train_4k",
+                      "--mesh", "2x2x2", "--json", str(tmp_path))
+        assert r.returncode == 0, r.stdout + r.stderr
+        rec = json.loads((tmp_path / "xlstm-125m__train_4k__2x2x2.json").read_text())
+        assert rec["mesh"] == {"pod": 2, "data": 2, "model": 2}
+        assert rec["collectives"]["total"] > 0  # DP gradient reduction exists
+
+    def test_moe_cell_compiles_with_expert_parallelism(self, tmp_path):
+        r = self._run("--arch", "grok-1-314b", "--shape", "decode_32k",
+                      "--mesh", "2x4", "--json", str(tmp_path))
+        assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_mesh_from_topology_uses_hicr_topology():
+    """The launcher path: the mesh builder consumes a HiCR Topology (the
+    declarative spec-sheet one), never raw jax.devices()."""
+    from repro.backends.tpu_spec import SpecTopologyManager
+    from repro.launch.mesh import mesh_from_topology
+
+    topo = SpecTopologyManager(pods=1, pod_shape=(2, 2)).query_topology()
+    # only 1 real device — we verify the sizing logic rejects/validates:
+    with pytest.raises(Exception):
+        # 4 chips but only 1 host device to back them -> jax raises; the
+        # sizing itself (4 chips, model=2 -> data=2) is exercised first.
+        mesh_from_topology(topo, model_parallelism=2)
+
+    with pytest.raises(ValueError, match="not divisible"):
+        mesh_from_topology(topo, model_parallelism=3)

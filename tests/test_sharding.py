@@ -1,0 +1,213 @@
+"""Sharding/partition layer: divisibility-fallback properties (hypothesis),
+batch/state/optimizer sharding heuristics. Runs on the single CPU device —
+mesh axes of size 1 everywhere, so these tests exercise the *logic* through
+PartitionSpec construction, not multi-device placement."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ShapeConfig, get_config
+from repro.sharding import partition
+
+
+def one_device_mesh(axes=("data", "model")):
+    dev = np.array(jax.devices()).reshape((1,) * len(axes))
+    return Mesh(dev, axes)
+
+
+class FakeMesh:
+    """Duck-typed mesh with arbitrary logical shape for spec logic tests
+    (spec_for_leaf/batch_spec only consult mesh.shape)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+class TestSpecForLeaf:
+    def setup_method(self):
+        self.mesh = FakeMesh(data=16, model=16)
+        self.plan = partition.default_plan(get_config("granite-20b"))
+
+    def test_tp_axis_assigned_when_divisible(self):
+        # granite d_model=6144 over model=16: 6144 % 16 == 0
+        spec = partition.spec_for_leaf(("embed", "mlp"), (6144, 24576), self.mesh, self.plan)
+        assert spec[1] == "model"
+
+    def test_replicate_when_not_divisible(self):
+        """The divisibility fallback: axis that does not divide -> None."""
+        spec = partition.spec_for_leaf(("heads",), (5,), self.mesh, self.plan)
+        assert spec == P(None)
+
+    def test_mesh_axis_used_at_most_once(self):
+        """A mesh axis may shard at most one tensor dim."""
+        spec = partition.spec_for_leaf(
+            ("heads", "kv_heads"), (64, 64), self.mesh, self.plan
+        )
+        used = [s for s in spec if s is not None]
+        flat = []
+        for s in used:
+            flat.extend(s if isinstance(s, tuple) else (s,))
+        assert len(flat) == len(set(flat)), f"mesh axis reused: {spec}"
+
+    def test_fsdp_plan_shards_embed_over_data(self):
+        plan = partition.default_plan(get_config("granite-20b"), fsdp=True)
+        spec = partition.spec_for_leaf(("embed", "mlp"), (6144, 24576), self.mesh, plan)
+        assert spec[0] == "data" and spec[1] == "model"
+
+    def test_no_fsdp_for_small_archs(self):
+        plan = partition.default_plan(get_config("gemma3-1b"))
+        assert not plan.fsdp  # ~1B dense: DP+TP only
+
+    def test_fsdp_auto_for_moe_giants(self):
+        assert partition.default_plan(get_config("kimi-k2-1t-a32b")).fsdp
+        assert partition.default_plan(get_config("grok-1-314b")).fsdp
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        dim=st.integers(1, 4096),
+        data=st.sampled_from([1, 2, 4, 8, 16]),
+        model=st.sampled_from([1, 2, 4, 8, 16]),
+    )
+    def test_property_divisibility_always_respected(self, dim, data, model):
+        """For ANY (dim, mesh) combination: if a dim is sharded over mesh
+        axes, their product divides the dim — never a ragged shard."""
+        mesh = FakeMesh(data=data, model=model)
+        plan = partition.default_plan(get_config("granite-20b"), fsdp=True)
+        for logical in ("embed", "heads", "mlp", "vocab", "expert"):
+            spec = partition.spec_for_leaf((logical,), (dim,), mesh, plan)
+            part = spec[0]
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0
+
+
+class TestBatchSpec:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        batch=st.sampled_from([1, 2, 4, 8, 32, 128, 256]),
+        pod=st.sampled_from([1, 2]),
+        data=st.sampled_from([1, 4, 16]),
+    )
+    def test_property_batch_never_ragged(self, batch, pod, data):
+        mesh = FakeMesh(pod=pod, data=data, model=16)
+        spec = partition.batch_spec(mesh, batch)
+        part = spec[0]
+        if part is None:
+            return
+        axes = part if isinstance(part, tuple) else (part,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert batch % size == 0
+
+    def test_drops_pod_axis_first(self):
+        """batch=16 on (pod=2, data=16): 16 % 32 != 0 -> shard over data only."""
+        mesh = FakeMesh(pod=2, data=16, model=16)
+        spec = partition.batch_spec(mesh, 16)
+        assert spec == P("data")
+
+    def test_unshardable_batch_replicates(self):
+        mesh = FakeMesh(pod=2, data=16, model=16)
+        assert partition.batch_spec(mesh, 1) == P(None)
+
+
+class TestStateShardings:
+    def test_kv_cache_sharding_heuristics(self):
+        """decode_32k: batch dim -> data, kv-heads dim -> model."""
+        cfg = get_config("minitron-8b")  # 32 heads, kv=8
+        shape = ShapeConfig("decode_32k", 32768, 128, "decode")
+        mesh = FakeMesh(data=16, model=8)
+        kv_spec = jax.ShapeDtypeStruct((128, 32768, 8, 128), jax.numpy.bfloat16)
+
+        # route through the same leaf logic state_shardings uses, via a
+        # one-leaf pytree and a duck mesh wrapper for NamedSharding:
+        class _NS:
+            def __init__(self, mesh, spec):
+                self.spec = spec
+
+        import repro.sharding.partition as pt
+        real = pt.NamedSharding
+        pt.NamedSharding = _NS
+        try:
+            out = partition.state_shardings({"kv": kv_spec}, mesh, cfg, shape)
+        finally:
+            pt.NamedSharding = real
+        spec = out["kv"].spec
+        assert spec[0] == "data"  # batch 128 over data=16
+        assert spec[2] == "model"  # kv heads 8 over model=8
+
+    def test_long_context_sequence_parallel_fallback(self):
+        """long_500k: batch=1 unshardable -> the sequence dim (>=4096) is
+        sharded over data (SP), bounding per-device KV."""
+        cfg = get_config("zamba2-7b")
+        shape = ShapeConfig("long_500k", 524288, 1, "decode")
+        mesh = FakeMesh(data=16, model=16)
+        kv_spec = jax.ShapeDtypeStruct((1, 524288, 32, 112), jax.numpy.bfloat16)
+
+        class _NS:
+            def __init__(self, mesh, spec):
+                self.spec = spec
+
+        import repro.sharding.partition as pt
+        real = pt.NamedSharding
+        pt.NamedSharding = _NS
+        try:
+            out = partition.state_shardings({"kv": kv_spec}, mesh, cfg, shape)
+        finally:
+            pt.NamedSharding = real
+        spec = out["kv"].spec
+        assert spec[0] is None and spec[1] == "data"
+
+
+class TestEndToEndShardingOnRealMesh:
+    """On the real 1-device mesh the full pipeline must produce valid
+    NamedShardings for every arch's parameter tree."""
+
+    @pytest.mark.parametrize("arch", ["gemma3-1b", "grok-1-314b", "xlstm-125m", "zamba2-7b"])
+    def test_param_shardings_cover_tree(self, arch):
+        from repro.models import build
+
+        cfg = get_config(arch, reduced=True)
+        model = build(cfg)
+        mesh = one_device_mesh()
+        axes_box = {}
+
+        def init_only():
+            p, axes = model.init(jax.random.PRNGKey(0))
+            axes_box["axes"] = axes
+            return p
+
+        specs = jax.eval_shape(init_only)
+        plan = partition.default_plan(cfg)
+        shardings = partition.param_shardings(axes_box["axes"], specs, mesh, plan)
+        n_specs = len(jax.tree_util.tree_leaves(specs))
+        n_shard = len(jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec")))
+        assert n_specs == n_shard
+
+    def test_optimizer_state_follows_params(self):
+        from repro.models import build
+        from repro.train import optimizer as opt_lib
+
+        cfg = get_config("gemma3-1b", reduced=True)
+        model = build(cfg)
+        mesh = one_device_mesh()
+        axes_box = {}
+
+        def init_only():
+            p, axes = model.init(jax.random.PRNGKey(0))
+            axes_box["axes"] = axes
+            return p
+
+        specs = jax.eval_shape(init_only)
+        plan = partition.default_plan(cfg)
+        p_sh = partition.param_shardings(axes_box["axes"], specs, mesh, plan)
+        ocfg = opt_lib.OptimizerConfig(name="adamw")
+        opt_specs = jax.eval_shape(lambda p: opt_lib.init(ocfg, p), specs)
+        o_sh = partition.opt_state_shardings(opt_specs, specs, p_sh, mesh)
+        # every optimizer leaf got a sharding
+        assert len(jax.tree_util.tree_leaves(
+            o_sh, is_leaf=lambda x: hasattr(x, "spec"))) == len(
+            jax.tree_util.tree_leaves(opt_specs))

@@ -1,0 +1,285 @@
+"""Training substrate: optimizers, microbatch accumulation, gradient
+compression (error feedback), checkpoint atomicity + exact resume, data
+pipeline determinism + prefetch."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ShapeConfig, get_config
+from repro.models import build
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train.compression import compress_decompress, dequantize_int8, quantize_int8
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+SHAPE = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name", ["adamw", "adafactor"])
+    def test_minimizes_quadratic(self, name):
+        cfg = opt_lib.OptimizerConfig(name=name, learning_rate=0.1, warmup_steps=0, weight_decay=0.0)
+        params = {"w": jnp.array([[3.0, -2.0], [1.5, 4.0]])}
+        state = opt_lib.init(cfg, params)
+        for _ in range(60):
+            grads = jax.tree_util.tree_map(lambda p: 2 * p, params)  # d/dp ||p||^2
+            params, state, _ = opt_lib.update(cfg, grads, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 0.3
+
+    def test_warmup_schedule(self):
+        cfg = opt_lib.OptimizerConfig(name="adamw", learning_rate=1.0, warmup_steps=10)
+        assert float(opt_lib.schedule(cfg, 0)) < 0.2
+        assert float(opt_lib.schedule(cfg, 10)) == pytest.approx(1.0, rel=0.05)
+
+    def test_grad_clipping(self):
+        g = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+        assert float(opt_lib.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+        assert float(norm) == pytest.approx(200.0, rel=1e-4)
+
+    def test_adafactor_state_is_factored(self):
+        """Adafactor's raison d'être: O(n+m) second-moment memory for (n,m)
+        matrices instead of Adam's O(nm)."""
+        cfg = opt_lib.OptimizerConfig(name="adafactor")
+        params = {"w": jnp.zeros((128, 256))}
+        state = opt_lib.init(cfg, params)
+        stat_bytes = sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree_util.tree_leaves(state)
+            if hasattr(x, "size")
+        )
+        assert stat_bytes < 128 * 256 * 4  # far below one full fp32 moment
+
+    def test_weight_decay_is_decoupled(self):
+        cfg = opt_lib.OptimizerConfig(name="adamw", learning_rate=0.1, warmup_steps=0, weight_decay=0.1)
+        params = {"w": jnp.array([10.0])}
+        state = opt_lib.init(cfg, params)
+        zero_grads = {"w": jnp.array([0.0])}
+        new_params, _, _ = opt_lib.update(cfg, zero_grads, state, params)
+        assert float(new_params["w"][0]) < 10.0  # decays even with zero gradient
+
+
+# ---------------------------------------------------------------------------
+# microbatch accumulation
+# ---------------------------------------------------------------------------
+
+
+class TestMicrobatching:
+    def test_accumulated_equals_full_batch(self):
+        """k microbatches must produce the same update as the full batch —
+        grad accumulation is numerics-neutral (fp32 accumulators)."""
+        cfg = get_config("gemma3-1b", reduced=True)
+        model = build(cfg)
+        ocfg = opt_lib.OptimizerConfig(name="adamw", learning_rate=1e-3)
+        params, _, opt_state, _ = init_train_state(model, ocfg, jax.random.PRNGKey(0))
+        batch = model.make_batch(jax.random.PRNGKey(1), SHAPE)
+
+        step1 = jax.jit(make_train_step(model, ocfg, TrainConfig(microbatches=1)))
+        step4 = jax.jit(make_train_step(model, ocfg, TrainConfig(microbatches=4)))
+        p1, _, _, m1 = step1(params, opt_state, None, batch)
+        p4, _, _, m4 = step4(params, opt_state, None, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+        for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+
+
+class TestCompression:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+    def test_quantize_roundtrip_bounded_error(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=64) * scale, jnp.float32)
+        q, s = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+        assert err.max() <= float(s) / 2 + 1e-6  # half-ULP of the int8 grid
+
+    def test_error_feedback_preserves_signal_over_steps(self):
+        """EF property: the SUM of compressed gradients converges to the sum
+        of true gradients (residual is carried, never dropped)."""
+        g_true = {"w": jnp.full((8,), 0.01, jnp.float32)}
+        ef = {"w": jnp.zeros((8,), jnp.float32)}
+        total = jnp.zeros((8,), jnp.float32)
+        for _ in range(50):
+            g_c, ef = compress_decompress(g_true, ef)
+            total = total + g_c["w"]
+        np.testing.assert_allclose(np.asarray(total), 0.01 * 50, rtol=0.05)
+
+    def test_residual_is_exact_complement(self):
+        g = {"w": jnp.asarray(np.random.default_rng(3).normal(size=32), jnp.float32)}
+        ef = {"w": jnp.zeros((32,), jnp.float32)}
+        g_c, ef_new = compress_decompress(g, ef)
+        np.testing.assert_allclose(
+            np.asarray(g_c["w"] + ef_new["w"]), np.asarray(g["w"]), rtol=1e-5, atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: atomic commit, exact resume, distributed publication
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {
+            "params": {"w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)},
+            "opt": {"m": jnp.zeros((8, 8)), "count": jnp.int32(7)},
+        }
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = self._tree()
+        ckpt.save(str(tmp_path), 5, tree, extra={"data_state": {"seed": 1, "step": 5}})
+        restored, extra = ckpt.restore(str(tmp_path), tree)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+        )
+        assert extra["data_state"] == {"seed": 1, "step": 5}
+
+    def test_latest_step_ignores_uncommitted(self, tmp_path):
+        tree = self._tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        ckpt.save(str(tmp_path), 2, tree)
+        # simulate a crash mid-write: a .tmp directory without manifest
+        os.makedirs(tmp_path / "step_00000003.tmp")
+        assert ckpt.latest_step(str(tmp_path)) == 2
+
+    def test_crash_before_commit_preserves_previous(self, tmp_path):
+        """Fault-tolerance: a torn write never shadows the committed step."""
+        tree = self._tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        # partially staged step 2 (no manifest, no rename)
+        staged = tmp_path / "step_00000002.tmp"
+        os.makedirs(staged)
+        (staged / "shard_00000.npz").write_bytes(b"torn")
+        restored, _ = ckpt.restore(str(tmp_path), tree)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+        )
+
+    def test_template_mismatch_detected(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, self._tree())
+        bad_template = {"params": {"w_renamed": jnp.zeros((8, 8))}}
+        with pytest.raises(ValueError, match="mismatch"):
+            ckpt.restore(str(tmp_path), bad_template)
+
+    def test_resume_reproduces_trajectory(self, tmp_path):
+        """Train 4 steps; OR train 2, checkpoint, restart, train 2 more —
+        identical parameters (deterministic resume incl. data state)."""
+        cfg = get_config("xlstm-125m", reduced=True)
+        model = build(cfg)
+        ocfg = opt_lib.OptimizerConfig(name="adamw", learning_rate=1e-3)
+        step = jax.jit(make_train_step(model, ocfg, TrainConfig()))
+
+        def run(params, opt_state, stream, n):
+            for _ in range(n):
+                params, opt_state, _, _ = step(params, opt_state, None, stream.next_batch())
+            return params, opt_state
+
+        # continuous run
+        params, _, opt_state, _ = init_train_state(model, ocfg, jax.random.PRNGKey(0))
+        stream = data_lib.SyntheticTokenStream(cfg, SHAPE)
+        p_cont, _ = run(params, opt_state, stream, 4)
+
+        # interrupted run
+        params, _, opt_state, _ = init_train_state(model, ocfg, jax.random.PRNGKey(0))
+        stream = data_lib.SyntheticTokenStream(cfg, SHAPE)
+        p_mid, o_mid = run(params, opt_state, stream, 2)
+        ckpt.save(str(tmp_path), 2, {"p": p_mid, "o": o_mid},
+                  extra={"data_state": stream.state.to_dict()})
+
+        restored, extra = ckpt.restore(str(tmp_path), {"p": p_mid, "o": o_mid})
+        stream2 = data_lib.SyntheticTokenStream(
+            cfg, SHAPE, state=data_lib.DataState.from_dict(extra["data_state"]))
+        p_resumed, _ = run(restored["p"], restored["o"], stream2, 2)
+
+        for a, b in zip(jax.tree_util.tree_leaves(p_cont), jax.tree_util.tree_leaves(p_resumed)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+    def test_publish_fetch_over_localsim(self, tmp_path):
+        """Distributed restore: shards published as DataObjects on one
+        instance are fetched byte-identical on another (node-failure path)."""
+        from repro.backends.localsim import LocalSimWorld
+        from repro.frontends.dataobject import DataObjectEngine
+
+        tree = self._tree(seed=9)
+        path = ckpt.save(str(tmp_path / "src"), 3, tree)
+        box = {}
+
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            engine = DataObjectEngine(cm, mm, instance_rank=rank)
+            if rank == 0:
+                box["ids"] = ckpt.publish_checkpoint(engine, mm, path)
+                cm.exchange_global_memory_slots(1, {})
+                cm.exchange_global_memory_slots(2, {})
+                return "published"
+            cm.exchange_global_memory_slots(1, {})
+            dst = str(tmp_path / "fetched" / "step_00000003")
+            ckpt.fetch_checkpoint(engine, box["ids"], dst)
+            cm.exchange_global_memory_slots(2, {})
+            return dst
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog)
+        restored, _ = ckpt.restore(str(tmp_path / "fetched"), tree)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+        )
+        w.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestDataPipeline:
+    def test_stream_is_deterministic(self):
+        cfg = get_config("gemma3-1b", reduced=True)
+        s1 = data_lib.SyntheticTokenStream(cfg, SHAPE)
+        s2 = data_lib.SyntheticTokenStream(cfg, SHAPE)
+        b1, b2 = s1.next_batch(), s2.next_batch()
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+
+    def test_state_restart_continues_sequence(self):
+        cfg = get_config("gemma3-1b", reduced=True)
+        s1 = data_lib.SyntheticTokenStream(cfg, SHAPE)
+        batches = [s1.next_batch() for _ in range(3)]
+        s2 = data_lib.SyntheticTokenStream(
+            cfg, SHAPE, state=data_lib.DataState.from_dict(
+                {"seed": s1.state.seed, "step": 2}))
+        b2 = s2.next_batch()
+        np.testing.assert_array_equal(
+            np.asarray(batches[2]["tokens"]), np.asarray(b2["tokens"]))
+
+    def test_prefetch_loader_delivers_same_batches(self):
+        """The Tasking+Channels-backed prefetcher must be a pure performance
+        feature: identical batch stream, just ahead of time."""
+        cfg = get_config("gemma3-1b", reduced=True)
+        plain = data_lib.SyntheticTokenStream(cfg, SHAPE)
+        loader = data_lib.PrefetchingLoader(
+            data_lib.SyntheticTokenStream(cfg, SHAPE), depth=2, workers=2)
+        loader.start()
+        try:
+            got = [loader.next_batch() for _ in range(4)]
+        finally:
+            loader.stop()
+        want = [plain.next_batch() for _ in range(4)]
+        got_sorted = sorted(np.asarray(b["tokens"]).sum() for b in got)
+        want_sorted = sorted(np.asarray(b["tokens"]).sum() for b in want)
+        assert got_sorted == want_sorted
