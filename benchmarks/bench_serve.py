@@ -1,0 +1,126 @@
+"""Serving throughput/latency: serial engine vs continuous batching.
+
+Same workload (requests of varied prompt/decode lengths, all submitted at
+t=0) through both serve paths:
+
+* serial   — `ServeEngine`, one request end-to-end at a time;
+* continuous — `ContinuousBatchingScheduler`, admit-on-free-slot, one
+  vmapped decode tick across all active slots.
+
+Reports aggregate decode tokens/s and per-request latency (submission at
+t=0 to reply, i.e. queueing included — the number a client sees). Both
+paths run a warmup pass first so jit compilation is excluded. Writes
+benchmarks/BENCH_serve.json and contributes rows to benchmarks/results.csv
+via benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.runtime import Runtime
+from repro.models import build
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler
+from repro.serve.workload import synthetic_requests
+
+ARCH = "gemma3-1b"
+N_REQUESTS = 12
+MAX_BATCH = 8
+PROMPT_RANGE = (4, 12)
+STEPS_RANGE = (8, 24)
+
+
+def _latency_stats(latencies):
+    arr = np.asarray(sorted(latencies))
+    return {
+        "latency_mean_s": round(float(arr.mean()), 4),
+        "latency_p50_s": round(float(np.percentile(arr, 50)), 4),
+        "latency_p95_s": round(float(np.percentile(arr, 95)), 4),
+    }
+
+
+def _run_serial(engine, requests):
+    t0 = time.monotonic()
+    latencies = []
+    for r in requests:
+        engine.generate(np.asarray([r.prompt], dtype=np.int32), steps=r.max_new_tokens)
+        latencies.append(time.monotonic() - t0)  # queued since t0
+    return time.monotonic() - t0, latencies
+
+
+def _run_continuous(sched, requests):
+    from collections import deque
+
+    backlog = deque(requests)
+    t0 = time.monotonic()
+    latencies = []
+    n_done = 0
+    while n_done < len(requests):
+        while backlog and sched.try_admit(backlog[0]):
+            backlog.popleft()
+        for _fin in sched.step():
+            latencies.append(time.monotonic() - t0)
+            n_done += 1
+    return time.monotonic() - t0, latencies
+
+
+def run(csv_writer=None) -> list[dict]:
+    cfg = get_config(ARCH, reduced=True)
+    model = build(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    max_len = PROMPT_RANGE[1] + STEPS_RANGE[1] + 1
+    runtime = Runtime("jaxdev")
+    requests = synthetic_requests(
+        cfg.vocab_size, N_REQUESTS, prompt_range=PROMPT_RANGE, steps_range=STEPS_RANGE
+    )
+    total_tokens = sum(r.max_new_tokens for r in requests)
+
+    engine = ServeEngine(model, params, max_len=max_len, runtime=runtime)
+    sched = ContinuousBatchingScheduler(
+        model, params, max_batch=MAX_BATCH, max_len=max_len, runtime=runtime
+    )
+
+    # warmup: compile prefill (per distinct prompt length) and decode units
+    _run_serial(engine, requests)
+    _run_continuous(sched, requests)
+
+    rows = []
+    for mode, runner, target in (
+        ("serial", _run_serial, engine),
+        ("continuous", _run_continuous, sched),
+    ):
+        wall, latencies = runner(target, requests)
+        row = {
+            "bench": "serve",
+            "mode": mode,
+            "arch": ARCH,
+            "n_requests": N_REQUESTS,
+            "max_batch": MAX_BATCH if mode == "continuous" else 1,
+            "total_decode_tokens": total_tokens,
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(total_tokens / wall, 2),
+            **_latency_stats(latencies),
+        }
+        rows.append(row)
+        print(f"[serve] {mode:<10} {row['tokens_per_s']:>8.1f} tok/s  "
+              f"wall={row['wall_s']:.2f}s  p50={row['latency_p50_s']:.2f}s  "
+              f"p95={row['latency_p95_s']:.2f}s")
+
+    speedup = rows[1]["tokens_per_s"] / rows[0]["tokens_per_s"]
+    print(f"[serve] continuous/serial aggregate speedup: {speedup:.2f}x")
+    out = {"rows": rows, "speedup_continuous_vs_serial": round(speedup, 3)}
+    path = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[serve] wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,7 @@ Paper artifact map:
     bench_tasking_fib  -> Fig. 9   (fine-grained tasking overhead)
     bench_jacobi       -> Figs. 10/11 (coarse tasking + strong/weak scaling)
     bench_rooflines    -> EXPERIMENTS.md §Roofline source table
+    bench_serve        -> BENCH_serve.json (continuous vs serial serving)
 Writes benchmarks/results.csv.
 """
 from __future__ import annotations
@@ -17,7 +18,14 @@ import csv
 import sys
 import time
 
-from . import bench_channels, bench_inference, bench_jacobi, bench_rooflines, bench_tasking_fib
+from . import (
+    bench_channels,
+    bench_inference,
+    bench_jacobi,
+    bench_rooflines,
+    bench_serve,
+    bench_tasking_fib,
+)
 
 ALL = {
     "channels": bench_channels.run,
@@ -25,6 +33,7 @@ ALL = {
     "tasking_fib": bench_tasking_fib.run,
     "jacobi": bench_jacobi.run,
     "rooflines": bench_rooflines.run,
+    "serve": bench_serve.run,
 }
 
 

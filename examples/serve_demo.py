@@ -1,16 +1,18 @@
-"""Serving demo: batched greedy generation through the ServeEngine, with the
-request front door on an HiCR MPSC channel (two client instances + one
-server instance over the localsim fabric).
+"""Continuous-batching serving demo with the request front door on HiCR
+channels: two producer instances stream requests of different prompt/decode
+lengths into an MPSC channel; one server instance drains them per scheduler
+tick, interleaves prefill/decode across slots, and replies per-request on
+completion over per-client SPSC channels (localsim fabric, 3 instances).
 
     PYTHONPATH=src python examples/serve_demo.py
 """
 import json
 
 import jax
-import numpy as np
 
 from repro.backends.localsim import LocalSimWorld
 from repro.configs import get_config
+from repro.core.runtime import Runtime
 from repro.frontends.channels import (
     MPSCNonLockingConsumer,
     MPSCNonLockingProducer,
@@ -18,53 +20,81 @@ from repro.frontends.channels import (
     SPSCProducer,
 )
 from repro.models import build
-from repro.serve.engine import ChannelServer, ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler
+from repro.serve.server import ChannelServer
+from repro.serve.workload import synthetic_requests, to_wire
 
 cfg = get_config("gemma3-1b", reduced=True)
 model = build(cfg)
 params, _ = model.init(jax.random.PRNGKey(0))
 MSG = 512
+N_CLIENTS = 2
+REQS_PER_CLIENT = 3
 
-print("direct batched generation:")
-engine = ServeEngine(model, params, max_len=64)
-prompts = np.array([[1, 2, 3, 4, 5], [9, 8, 7, 6, 5]], dtype=np.int32)
-result = engine.generate(prompts, steps=8)
-for i, row in enumerate(result.tokens):
-    print(f"  prompt {i}: {prompts[i].tolist()} -> {row.tolist()}")
+
+def client_requests(rank):
+    """Per-client workload: varied prompt and decode lengths."""
+    return [
+        to_wire(r)
+        for r in synthetic_requests(
+            cfg.vocab_size, REQS_PER_CLIENT, prompt_range=(3, 9),
+            steps_range=(2, 10), seed=rank, rid_prefix=f"c{rank}",
+        )
+    ]
 
 
 def program(mgrs, rank):
+    # Slot exchange is COLLECTIVE (paper §3.1.4): every instance participates
+    # in every tag's exchange in the same order (request tag 1, then one
+    # reply tag per client), volunteering zero slots where it's not an
+    # endpoint.
     cm, mm = mgrs.communication_manager, mgrs.memory_manager
     if rank == 0:  # the server instance
-        req = MPSCNonLockingConsumer(cm, mm, tag=1, capacity=4, msg_size=MSG, n_producers=2)
-        rep1 = SPSCProducer(cm, mm, tag=10, capacity=4, msg_size=MSG)
-        rep2 = SPSCProducer(cm, mm, tag=11, capacity=4, msg_size=MSG)
+        req = MPSCNonLockingConsumer(cm, mm, tag=1, capacity=8, msg_size=MSG,
+                                     n_producers=N_CLIENTS)
+        reply_chans = {
+            f"c{c + 1}": SPSCProducer(cm, mm, tag=10 + c, capacity=8, msg_size=MSG)
+            for c in range(N_CLIENTS)
+        }
 
         class Router:
+            """Routes each reply to its client's SPSC channel by id prefix."""
+
             def push(self, msg):
                 body = json.loads(bytes(msg).rstrip(b"\0").decode())
-                (rep1 if body["id"] == "client-1" else rep2).push(msg)
+                reply_chans[body["id"].split("-")[0]].push(msg)
 
-        ChannelServer(ServeEngine(model, params, max_len=64), req, Router(),
-                      msg_size=MSG).serve(n_requests=2)
-        return "server done"
+        sched = ContinuousBatchingScheduler(model, params, max_batch=4, max_len=32,
+                                            runtime=Runtime("jaxdev"))
+        server = ChannelServer(sched, req, Router(), msg_size=MSG)
+        ticks = server.serve(n_requests=N_CLIENTS * REQS_PER_CLIENT)
+        return f"served {N_CLIENTS * REQS_PER_CLIENT} requests in {ticks} decode ticks"
+    # a client instance
     cidx = rank - 1
-    prod = MPSCNonLockingProducer(cm, mm, tag=1, capacity=4, msg_size=MSG, producer_index=cidx)
-    if cidx == 0:
-        reply = SPSCConsumer(cm, mm, tag=10, capacity=4, msg_size=MSG)
-        cm.exchange_global_memory_slots(11, {})
-    else:
-        cm.exchange_global_memory_slots(10, {})
-        reply = SPSCConsumer(cm, mm, tag=11, capacity=4, msg_size=MSG)
-    req = {"id": f"client-{rank}", "prompt": [rank, 2, 3], "steps": 5}
-    prod.push(json.dumps(req).encode().ljust(MSG, b"\0"))
-    rep = json.loads(reply.pop(timeout=300).rstrip(b"\0").decode())
-    return rep["tokens"]
+    prod = MPSCNonLockingProducer(cm, mm, tag=1, capacity=8, msg_size=MSG,
+                                  producer_index=cidx)
+    reply = None
+    for c in range(N_CLIENTS):
+        if c == cidx:
+            reply = SPSCConsumer(cm, mm, tag=10 + c, capacity=8, msg_size=MSG)
+        else:
+            cm.exchange_global_memory_slots(10 + c, {})  # not an endpoint
+    reqs = client_requests(rank)
+    for r in reqs:
+        prod.push(json.dumps(r).encode().ljust(MSG, b"\0"))
+    got = {}
+    while len(got) < len(reqs):  # replies arrive in completion order
+        rep = json.loads(reply.pop(timeout=300).rstrip(b"\0").decode())
+        got[rep["id"]] = rep["tokens"]
+    return got
 
 
-print("\nchannel-served generation (2 clients -> MPSC -> server):")
-world = LocalSimWorld(3)
+print(f"continuous-batching serve: {N_CLIENTS} producers x {REQS_PER_CLIENT} "
+      "requests -> MPSC -> scheduler -> per-client replies")
+world = LocalSimWorld(1 + N_CLIENTS)
 results = world.launch(program, timeout=600)
 world.shutdown()
-for rank in (1, 2):
-    print(f"  client-{rank} received tokens: {results[rank]}")
+print(f"server: {results[0]}")
+for rank in range(1, 1 + N_CLIENTS):
+    for rid, tokens in sorted(results[rank].items()):
+        print(f"  {rid}: {tokens}")

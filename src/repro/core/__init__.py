@@ -26,6 +26,7 @@ from .registry import (
     get_backend,
     register_backend,
 )
+from .runtime import Runtime, RuntimeAssemblyError
 from .stateful import (
     ExecutionState,
     GlobalMemorySlot,
@@ -49,7 +50,8 @@ __all__ = [
     "InstanceStatus", "InstanceTemplate", "InvalidMemcpyDirectionError",
     "LifetimeError", "LocalMemorySlot", "ManagerSet", "MemcpyDirection",
     "MemoryManager", "MemorySpace", "MemorySpaceMismatchError",
-    "ProcessingUnit", "ProcessingUnitStatus", "Topology", "TopologyManager",
+    "ProcessingUnit", "ProcessingUnitStatus", "Runtime",
+    "RuntimeAssemblyError", "Topology", "TopologyManager",
     "UnsupportedOperationError", "available_backends", "build",
     "capability_table", "get_backend", "register_backend",
 ]

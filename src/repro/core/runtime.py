@@ -1,0 +1,138 @@
+"""Runtime facade: a ManagerSet assembled from the backend registry by name.
+
+The paper's usage pattern (Fig. 4) has the *launcher* instantiate concrete
+backends and hand the application abstract manager references. `Runtime`
+packages that pattern: callers name a backend (``"hostcpu"``, ``"jaxdev"``,
+...) and receive a ready `ManagerSet` built through ``registry.build()`` —
+no application-level import of concrete backend modules, so the serving and
+launch layers stay backend-agnostic.
+
+A Runtime also owns a default processing unit (first compute resource of the
+queried topology) and offers a synchronous ``run()`` helper that walks the
+full HiCR execution lifecycle (create state -> execute -> await -> result).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+from . import registry
+from .definitions import HiCRError
+from .managers import ManagerSet
+from .stateful import ProcessingUnit
+from .stateless import ExecutionUnit, Topology
+
+#: Roles a Runtime will try to build, in build order.
+_ASSEMBLY_ROLES = ("topology", "memory", "communication", "compute", "instance")
+
+
+class RuntimeAssemblyError(HiCRError):
+    """A manager role could not be instantiated from the registry."""
+
+
+class Runtime:
+    """Backend-agnostic application runtime over registry-built managers.
+
+    Parameters
+    ----------
+    backend:
+        Registry name of the primary backend. Every role it implements is
+        instantiated (roles whose factories need launch-time context, e.g.
+        localsim's world handle, raise `RuntimeAssemblyError` with guidance).
+    overrides:
+        Optional ``role -> backend_name`` mapping that sources individual
+        roles from a different backend (the paper's mix-and-match table 1
+        usage, e.g. hostcpu topology + jaxdev compute).
+    role_kwargs:
+        Optional ``role -> kwargs`` passed to that role's factory.
+    """
+
+    def __init__(
+        self,
+        backend: str = "hostcpu",
+        *,
+        overrides: Optional[Mapping[str, str]] = None,
+        role_kwargs: Optional[Mapping[str, Mapping]] = None,
+    ):
+        self.backend = backend
+        overrides = dict(overrides or {})
+        role_kwargs = dict(role_kwargs or {})
+        info = registry.get_backend(backend)
+        built: dict[str, object] = {}
+        for role in _ASSEMBLY_ROLES:
+            src = overrides.get(role, backend if role in info.factories else None)
+            if src is None:
+                continue
+            try:
+                built[role] = registry.build(src, role, **role_kwargs.get(role, {}))
+            except TypeError as e:
+                raise RuntimeAssemblyError(
+                    f"backend {src!r} role {role!r} needs launch-time context "
+                    f"({e}); pass role_kwargs or construct the manager directly"
+                ) from e
+        self.managers = ManagerSet(
+            instance_manager=built.get("instance"),
+            topology_managers=(built["topology"],) if "topology" in built else (),
+            memory_manager=built.get("memory"),
+            communication_manager=built.get("communication"),
+            compute_manager=built.get("compute"),
+        )
+        self._pu: Optional[ProcessingUnit] = None
+        self._topology: Optional[Topology] = None
+
+    # -- manager access -----------------------------------------------------
+    @property
+    def compute_manager(self):
+        if self.managers.compute_manager is None:
+            raise RuntimeAssemblyError(f"backend {self.backend!r} has no compute role")
+        return self.managers.compute_manager
+
+    @property
+    def memory_manager(self):
+        return self.managers.memory_manager
+
+    @property
+    def communication_manager(self):
+        return self.managers.communication_manager
+
+    @property
+    def instance_manager(self):
+        return self.managers.instance_manager
+
+    def query_topology(self) -> Topology:
+        if self._topology is None:
+            if not self.managers.topology_managers:
+                raise RuntimeAssemblyError(
+                    f"backend {self.backend!r} has no topology role; override "
+                    "it from a backend that does (e.g. hostcpu)"
+                )
+            self._topology = self.managers.query_full_topology()
+        return self._topology
+
+    # -- execution helpers --------------------------------------------------
+    @property
+    def processing_unit(self) -> ProcessingUnit:
+        """Default PU: first compute resource of the topology, initialized."""
+        if self._pu is None:
+            resources = self.query_topology().all_compute_resources()
+            if not resources:
+                raise RuntimeAssemblyError("topology exposes no compute resources")
+            cm = self.compute_manager
+            self._pu = cm.create_processing_unit(resources[0])
+            cm.initialize(self._pu)
+        return self._pu
+
+    def create_execution_unit(self, fn, *, name: str = "anonymous", **kwargs) -> ExecutionUnit:
+        return self.compute_manager.create_execution_unit(fn, name=name, **kwargs)
+
+    def run(self, unit: ExecutionUnit, *args, **kwargs):
+        """Synchronous execution: state -> execute -> await -> result."""
+        cm = self.compute_manager
+        state = cm.create_execution_state(unit, *args, **kwargs)
+        cm.execute(self.processing_unit, state)
+        cm.await_(self.processing_unit)
+        return state.get_result()
+
+    def finalize(self) -> None:
+        if self._pu is not None:
+            self.compute_manager.finalize(self._pu)
+            self._pu = None

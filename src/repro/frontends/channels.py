@@ -25,7 +25,15 @@ import struct
 import time
 from typing import Optional, Sequence
 
+from repro.core.definitions import HiCRError
 from repro.core.managers import CommunicationManager, MemoryManager
+
+
+class ChannelMessageTooLargeError(HiCRError):
+    """A message exceeds the channel's fixed msg_size. Rings carry
+    fixed-size messages; an oversized payload cannot be shrunk by padding
+    (`bytes.ljust` never truncates) and would corrupt neighbouring slots."""
+
 
 # key layout within a channel's exchange tag
 KEY_PAYLOAD = 0
@@ -77,8 +85,21 @@ class SPSCProducer(_EndBase):
         self._cached_head = _read_counter(self.comm, self.mem, self._head_slot, self._scratch)
         return self._tail - self._cached_head >= self.capacity
 
+    def _check_size(self, data: bytes) -> None:
+        if len(data) > self.msg_size:
+            raise ChannelMessageTooLargeError(
+                f"message of {len(data)} bytes exceeds channel msg_size "
+                f"{self.msg_size}"
+            )
+
+    def depth(self) -> int:
+        """In-flight messages as seen from the producer (refreshes the
+        consumer's head counter — one remote read)."""
+        self._cached_head = _read_counter(self.comm, self.mem, self._head_slot, self._scratch)
+        return self._tail - self._cached_head
+
     def try_push(self, data: bytes) -> bool:
-        assert len(data) <= self.msg_size
+        self._check_size(data)
         if self._full():
             return False
         slot_idx = self._tail % self.capacity
@@ -153,7 +174,16 @@ class MPSCLockingProducer(SPSCProducer):
     The global lock also protects the (read-tail, write-payload, bump-tail)
     critical section because multiple producers share one tail counter."""
 
+    def depth(self) -> int:
+        """The tail counter is shared between producers, so the locally
+        cached copy may be stale: refresh both counters (head first, so a
+        concurrent consumer cannot make the difference negative)."""
+        self._cached_head = _read_counter(self.comm, self.mem, self._head_slot, self._scratch)
+        self._tail = _read_counter(self.comm, self.mem, self._tail_slot, self._scratch)
+        return self._tail - self._cached_head
+
     def try_push(self, data: bytes) -> bool:
+        self._check_size(data)
         self.comm.acquire_global_lock(self.tag)
         try:
             # tail is shared between producers: re-read under the lock
@@ -214,6 +244,10 @@ class MPSCNonLockingConsumer:
             ring._head = 0
             self.rings.append(ring)
         self._rr = 0
+
+    def depth(self) -> int:
+        """Total messages pending across all producer rings."""
+        return sum(ring.depth() for ring in self.rings)
 
     def try_pop(self) -> Optional[bytes]:
         for _ in range(len(self.rings)):

@@ -15,7 +15,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from .ops import CompilerParams, MemorySpace
 
 NEG_INF = -1e30
 
@@ -101,7 +103,7 @@ def decode_attention(
         kernel,
         grid=(B, KV, ns),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM, block_shape=(1,), index_map=lambda b, h, i: (b,)),
+            pl.BlockSpec(memory_space=MemorySpace.SMEM, block_shape=(1,), index_map=lambda b, h, i: (b,)),
             pl.BlockSpec((1, 1, groups, hd), lambda b, h, i: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_s, hd), lambda b, h, i: (b, h, i, 0)),
             pl.BlockSpec((1, 1, block_s, hd), lambda b, h, i: (b, h, i, 0)),
@@ -113,7 +115,7 @@ def decode_attention(
             pltpu.VMEM((groups, 1), jnp.float32),
             pltpu.VMEM((groups, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

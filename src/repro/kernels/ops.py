@@ -15,8 +15,15 @@ import functools
 from typing import Optional
 
 import jax
+from jax.experimental.pallas import tpu as pltpu
 
 from . import ref
+
+#: jax >= 0.5 renamed TPUCompilerParams -> CompilerParams and
+#: TPUMemorySpace -> MemorySpace; kernels import these aliases so they run
+#: on either release line.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
 
 _INTERPRET = True  # this container is CPU-only; real TPU flips this off
 

@@ -1,9 +1,12 @@
-"""Serving driver: load (or init) weights, start the ServeEngine, and serve
-batched requests — either a synthetic benchmark batch or the channel front
-door (examples/serve_demo.py wires the multi-instance version).
+"""Serving driver: load (or init) weights and serve a synthetic workload
+through either the serial engine or the continuous-batching scheduler, on a
+registry-built Runtime (no concrete-backend imports here).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
-        --batch 4 --prompt-len 16 --steps 32 [--ckpt-dir /tmp/run1]
+        --mode continuous --max-batch 8 --requests 16 [--backend jaxdev]
+
+The channel-driven multi-instance front door (2 producers + 1 server over
+the localsim fabric) is wired in examples/serve_demo.py.
 """
 from __future__ import annotations
 
@@ -14,8 +17,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.runtime import Runtime
 from repro.models import build
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler
+from repro.serve.workload import synthetic_requests
 from repro.train import checkpoint as ckpt
 
 
@@ -23,10 +29,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--backend", default="jaxdev", help="registry backend for the Runtime")
+    ap.add_argument("--mode", choices=("serial", "continuous"), default="continuous")
+    ap.add_argument("--max-batch", type=int, default=8, help="scheduler slots (continuous mode)")
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -39,18 +47,35 @@ def main(argv=None):
         print(f"restored weights from {args.ckpt_dir}")
 
     prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
-    engine = ServeEngine(model, params, max_len=prefix + args.prompt_len + args.steps)
-    rng = np.random.default_rng(0)
+    max_len = prefix + args.prompt_len + args.steps
+    runtime = Runtime(args.backend)
+    requests = synthetic_requests(
+        cfg.vocab_size,
+        args.requests,
+        prompt_range=(max(1, args.prompt_len // 2), args.prompt_len + 1),
+        steps_range=(max(1, args.steps // 2), args.steps + 1),
+    )
+    total_tokens = sum(r.max_new_tokens for r in requests)
 
-    for r in range(args.rounds):
-        prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
-        t0 = time.time()
-        result = engine.generate(prompts, steps=args.steps)
-        dt = time.time() - t0
-        tok_s = args.batch * args.steps / dt
-        print(f"round {r}: generated {args.batch}x{args.steps} tokens in {dt:.2f}s "
-              f"({tok_s:.1f} tok/s); first row: {result.tokens[0][:8].tolist()}...")
-    print("serving complete")
+    t0 = time.time()
+    if args.mode == "serial":
+        engine = ServeEngine(model, params, max_len=max_len, runtime=runtime)
+        for r in requests:
+            prompt = np.asarray([r.prompt], dtype=np.int32)
+            result = engine.generate(prompt, steps=r.max_new_tokens)
+            print(f"{r.rid}: {result.tokens[0][:8].tolist()}...")
+    else:
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=args.max_batch, max_len=max_len, runtime=runtime
+        )
+        results = sched.serve(requests)
+        for r in requests:
+            fin = results[r.rid]
+            print(f"{fin.rid}: {fin.tokens[:8]}... ({fin.finish_reason})")
+        print(f"scheduler: {sched.ticks} decode ticks for {len(requests)} requests")
+    dt = time.time() - t0
+    print(f"served {len(requests)} requests / {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s, mode={args.mode}, backend={args.backend})")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,4 @@
-"""Serving substrate: batched prefill/decode engine over the model zoo."""
-from . import engine  # noqa: F401
+"""Serving substrate over the model zoo: serial engine (`engine`), batched
+decode core (`batching`), continuous-batching scheduler (`scheduler`), and
+the HiCR-channel front door (`server`)."""
+from . import batching, engine, scheduler, server, workload  # noqa: F401

@@ -1,0 +1,123 @@
+"""Batched decode core: per-request decoder states packed into fixed slots.
+
+`SlotDecoder` owns `max_slots` state slots sized for `max_len` positions.
+Admission prefetches one request at a time (B=1 prefill with cache headroom)
+and scatters the resulting state into a free slot; every tick then runs ONE
+vmapped decode step over all slots — shapes never change as requests of
+different lengths join and leave, so the decode execution unit compiles
+exactly once and stays jit-stable for the lifetime of the server.
+
+All computation is dispatched through a HiCR compute manager obtained from a
+`Runtime` facade (registry-built, backend-agnostic): prefill, the batched
+decode step, and the state scatter are execution units; the decoder itself
+only moves small host-side arrays (last tokens, positions).
+
+Text-only protocol: requests supply token prompts; families that need extra
+prefill inputs (VLM patches, audio frames) are out of scope here.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runtime import Runtime
+from repro.models.model_zoo import ModelBundle
+
+
+class SlotDecoder:
+    def __init__(
+        self,
+        model: ModelBundle,
+        params,
+        *,
+        max_slots: int = 8,
+        max_len: int = 256,
+        runtime: Optional[Runtime] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.rt = runtime or Runtime("jaxdev")
+        cm = self.rt.compute_manager
+
+        prefill_fn = model.make_prefill(max_len) if model.make_prefill else model.prefill
+        self._prefill_unit = cm.create_execution_unit(
+            lambda p, b: prefill_fn(p, b), name="prefill", jit=True
+        )
+
+        def batched_decode(p, states, tokens, pos):
+            # states: leaves (max_slots, 1, ...); tokens (max_slots, 1, 1);
+            # pos (max_slots,). vmap maps the slot axis so each slot decodes
+            # as an independent B=1 request at its own position.
+            def one(state, tok, position):
+                logits, new_state = model.decode_step(
+                    p, state, {"tokens": tok, "pos": position}
+                )
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)[0], new_state
+
+            return jax.vmap(one, in_axes=(0, 0, 0))(states, tokens, pos)
+
+        self._decode_unit = cm.create_execution_unit(
+            batched_decode, name="batched_decode", jit=True
+        )
+
+        def pack(bufs, state, slot):
+            return jax.tree_util.tree_map(
+                lambda b, leaf: jax.lax.dynamic_update_index_in_dim(b, leaf, slot, 0),
+                bufs,
+                state,
+            )
+
+        self._pack_unit = cm.create_execution_unit(pack, name="pack_slot", jit=True)
+
+        self._states = None  # stacked state pytree, lazily sized from prefill
+        self.last_tokens = np.zeros((max_slots,), dtype=np.int32)
+        self.pos = np.zeros((max_slots,), dtype=np.int32)
+
+    # -- admission ----------------------------------------------------------
+    def prefill(self, prompt: Sequence[int]):
+        """B=1 prefill with max_len cache headroom. Returns (first greedy
+        token, decoder state). Compiles once per distinct prompt length."""
+        tokens = jnp.asarray(np.asarray(prompt, dtype=np.int32)[None, :])
+        logits, state = self.rt.run(self._prefill_unit, self.params, {"tokens": tokens})
+        first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        return first, state
+
+    def load(self, slot: int, state, last_token: int, pos: int) -> None:
+        """Scatter a prefilled B=1 state into `slot` of the packed buffers."""
+        if not 0 <= slot < self.max_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.max_slots})")
+        if self._states is None:
+            self._states = jax.tree_util.tree_map(
+                lambda leaf: jnp.zeros((self.max_slots,) + leaf.shape, leaf.dtype),
+                state,
+            )
+        self._states = self.rt.run(
+            self._pack_unit, self._states, state, jnp.int32(slot)
+        )
+        self.last_tokens[slot] = last_token
+        self.pos[slot] = pos
+
+    # -- one decode tick ----------------------------------------------------
+    def step(self) -> np.ndarray:
+        """Advance every slot one token. Returns the (max_slots,) array of
+        new greedy tokens; values in slots without a live request are
+        garbage and must be ignored by the caller."""
+        if self._states is None:
+            raise RuntimeError("no request was ever loaded into the decoder")
+        tokens = jnp.asarray(self.last_tokens)[:, None, None]
+        new_tokens, self._states = self.rt.run(
+            self._decode_unit,
+            self.params,
+            self._states,
+            tokens,
+            jnp.asarray(self.pos),
+        )
+        new_tokens = np.asarray(new_tokens)
+        self.last_tokens = new_tokens.copy()
+        self.pos = self.pos + 1
+        return new_tokens

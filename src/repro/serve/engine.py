@@ -1,23 +1,25 @@
-"""Batched serving engine: prefill + greedy decode over the model zoo's
-uniform state protocol, with an HiCR-channel-driven request front door.
+"""Serial serving engine: prefill + greedy decode over the model zoo's
+uniform state protocol.
 
-The engine core is pure JAX (jitted prefill / decode-step execution units
-dispatched through a HiCR compute manager); `ChannelServer` wires it to an
-MPSC channel so multiple producer instances can submit prompts — the
-paper's Channels frontend doing real work (QoS: request-based, low-latency).
+`ServeEngine` handles one batch end-to-end at a time — it is the serial
+baseline that `serve/scheduler.py`'s continuous-batching path is measured
+against (benchmarks/bench_serve.py). Execution units are dispatched through
+a HiCR compute manager obtained from a registry-built `Runtime` facade, so
+the engine never imports a concrete backend.
+
+The channel front door lives in `serve/server.py` (`ChannelServer`), driven
+by the continuous-batching scheduler.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.backends.jaxdev import JaxComputeManager, JaxTopologyManager
-from repro.configs import ShapeConfig
+from repro.core.runtime import Runtime
 from repro.models.model_zoo import ModelBundle
 
 
@@ -28,30 +30,32 @@ class GenerationResult:
 
 
 class ServeEngine:
-    def __init__(self, model: ModelBundle, params, *, max_len: int = 256):
+    def __init__(
+        self,
+        model: ModelBundle,
+        params,
+        *,
+        max_len: int = 256,
+        runtime: Optional[Runtime] = None,
+    ):
         self.model = model
         self.params = params
         self.max_len = max_len
-        # execution units through the HiCR compute manager (jaxdev backend).
-        # Prefill must allocate cache headroom up to max_len so decode steps
-        # never write past the cache (model_zoo.make_prefill).
+        self.rt = runtime or Runtime("jaxdev")
+        cm = self.rt.compute_manager
+        # execution units through the HiCR compute manager. Prefill must
+        # allocate cache headroom up to max_len so decode steps never write
+        # past the cache (model_zoo.make_prefill).
         prefill_fn = model.make_prefill(max_len) if model.make_prefill else model.prefill
-        self.cpm = JaxComputeManager()
-        self._prefill_unit = self.cpm.create_execution_unit(
+        self._prefill_unit = cm.create_execution_unit(
             lambda p, b: prefill_fn(p, b), name="prefill", jit=True
         )
-        self._decode_unit = self.cpm.create_execution_unit(
+        self._decode_unit = cm.create_execution_unit(
             lambda p, s, b: model.decode_step(p, s, b), name="decode_step", jit=True
         )
-        topo = JaxTopologyManager().query_topology()
-        self.pu = self.cpm.create_processing_unit(topo.all_compute_resources()[0])
-        self.cpm.initialize(self.pu)
 
     def _run(self, unit, *args):
-        state = self.cpm.create_execution_state(unit, *args)
-        self.cpm.execute(self.pu, state)
-        self.cpm.await_(self.pu)
-        return state.get_result()
+        return self.rt.run(unit, *args)
 
     def generate(self, prompts: np.ndarray, steps: int) -> GenerationResult:
         """prompts: (B, S) int32. Greedy decode `steps` new tokens."""
@@ -73,21 +77,5 @@ class ServeEngine:
         )
 
 
-class ChannelServer:
-    """Consumes JSON requests {'id', 'prompt': [ints], 'steps'} from an MPSC
-    channel consumer and posts replies through a reply channel producer."""
-
-    def __init__(self, engine: ServeEngine, consumer, reply_producer, *, msg_size: int = 1024):
-        self.engine = engine
-        self.consumer = consumer
-        self.reply = reply_producer
-        self.msg_size = msg_size
-
-    def serve(self, n_requests: int):
-        for _ in range(n_requests):
-            raw = self.consumer.pop()
-            req = json.loads(raw.rstrip(b"\0").decode())
-            prompt = np.asarray([req["prompt"]], dtype=np.int32)
-            result = self.engine.generate(prompt, req["steps"])
-            rep = json.dumps({"id": req["id"], "tokens": result.tokens[0].tolist()}).encode()
-            self.reply.push(rep.ljust(self.msg_size, b"\0"))
+# compat re-export: the channel front door moved to serve/server.py
+from repro.serve.server import ChannelServer  # noqa: E402,F401

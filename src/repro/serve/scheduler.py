@@ -1,0 +1,169 @@
+"""Continuous-batching scheduler: slot-based request table over SlotDecoder.
+
+The scheduler decouples request admission from kernel scheduling (the Specx
+/ runtime-support-layer split): requests are admitted whenever a slot is
+free — including mid-decode of other requests — decode ticks interleave all
+active requests in one jit-stable batched step, and slots are evicted the
+moment a request hits EOS, its token budget, or the cache ceiling. Freed
+slots are immediately reusable by the next admission, so the server sustains
+a full batch under a steady request stream.
+
+Token semantics match the serial `ServeEngine.generate` exactly: the first
+emitted token is the greedy pick from the prefill logits; each subsequent
+token comes from one decode step at the request's own position.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.core.runtime import Runtime
+from repro.models.model_zoo import ModelBundle
+
+from .batching import SlotDecoder
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `max_new_tokens` bounds the decode length;
+    `eos_id` (optional) triggers early eviction."""
+
+    rid: str
+    prompt: Sequence[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: str
+    prompt: List[int]
+    tokens: List[int]
+    finish_reason: str  # "length" | "eos" | "max_len"
+
+
+@dataclasses.dataclass
+class _Active:
+    """Request-table row: one admitted request bound to a decoder slot."""
+
+    request: Request
+    slot: int
+    emitted: List[int]
+
+
+class ContinuousBatchingScheduler:
+    def __init__(
+        self,
+        model: ModelBundle,
+        params,
+        *,
+        max_batch: int = 8,
+        max_len: int = 256,
+        runtime: Optional[Runtime] = None,
+    ):
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.decoder = SlotDecoder(
+            model, params, max_slots=max_batch, max_len=max_len, runtime=runtime
+        )
+        # multimodal prefixes occupy cache positions before the text prompt
+        self._prefix = model.cfg.vision_tokens if model.cfg.family == "vlm" else 0
+        self._table: List[Optional[_Active]] = [None] * max_batch
+        self._free: deque[int] = deque(range(max_batch))
+        self._finished: List[FinishedRequest] = []
+        self.ticks = 0
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_count(self) -> int:
+        return self.max_batch - len(self._free)
+
+    def active_ids(self) -> List[str]:
+        return [row.request.rid for row in self._table if row is not None]
+
+    # -- admission (any time, including mid-decode) -------------------------
+    def try_admit(self, request: Request) -> bool:
+        """Prefill `request` and seat it in a free slot. Returns False when
+        the table is full; requests finishing at their very first token are
+        completed without consuming a slot."""
+        if request.max_new_tokens < 1:
+            raise ValueError(f"request {request.rid!r}: max_new_tokens must be >= 1")
+        prompt_len = len(request.prompt)
+        if self._prefix + prompt_len + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.rid!r} needs {prompt_len + request.max_new_tokens} "
+                f"cache positions (+{self._prefix} prefix), scheduler max_len is {self.max_len}"
+            )
+        if any(row is not None and row.request.rid == request.rid for row in self._table):
+            raise ValueError(f"request id {request.rid!r} is already active")
+        if not self._free:
+            return False
+        first, state = self.decoder.prefill(request.prompt)
+        emitted = [first]
+        if request.max_new_tokens == 1 or first == request.eos_id:
+            self._finished.append(self._finish(request, emitted))
+            return True
+        slot = self._free.popleft()
+        self.decoder.load(slot, state, first, self._prefix + prompt_len)
+        self._table[slot] = _Active(request=request, slot=slot, emitted=emitted)
+        return True
+
+    def _finish(self, request: Request, emitted: List[int]) -> FinishedRequest:
+        if emitted and emitted[-1] == request.eos_id:
+            reason = "eos"
+        elif len(emitted) >= request.max_new_tokens:
+            reason = "length"
+        else:
+            reason = "max_len"
+        return FinishedRequest(
+            rid=request.rid,
+            prompt=list(request.prompt),
+            tokens=emitted,
+            finish_reason=reason,
+        )
+
+    # -- one scheduler tick --------------------------------------------------
+    def step(self) -> List[FinishedRequest]:
+        """Run one batched decode tick over all active slots and evict every
+        request that completed. Also drains requests that finished during
+        admission. Returns the newly finished requests."""
+        done, self._finished = self._finished, []
+        if self.active_count == 0:
+            return done
+        new_tokens = self.decoder.step()
+        self.ticks += 1
+        for slot, row in enumerate(self._table):
+            if row is None:
+                continue
+            tok = int(new_tokens[slot])
+            row.emitted.append(tok)
+            req = row.request
+            hit_eos = tok == req.eos_id
+            out_of_budget = len(row.emitted) >= req.max_new_tokens
+            out_of_cache = int(self.decoder.pos[slot]) >= self.max_len
+            if hit_eos or out_of_budget or out_of_cache:
+                done.append(self._finish(req, row.emitted))
+                self._table[slot] = None
+                self._free.append(slot)
+        return done
+
+    # -- batch driver --------------------------------------------------------
+    def serve(self, requests: Iterable[Request]) -> Dict[str, FinishedRequest]:
+        """Drive a full workload: admit whenever a slot frees up, tick until
+        every request has completed. Returns results keyed by request id."""
+        backlog = deque(requests)
+        results: Dict[str, FinishedRequest] = {}
+        expected = len(backlog)
+        n_done = 0  # count finishes, not dict keys: duplicate rids must not hang
+        while n_done < expected:
+            while backlog and self.try_admit(backlog[0]):
+                backlog.popleft()
+            for fin in self.step():
+                results[fin.rid] = fin
+                n_done += 1
+        return results

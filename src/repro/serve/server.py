@@ -1,0 +1,133 @@
+"""Channel front door for the continuous-batching scheduler.
+
+`ChannelServer` turns the paper's Channels frontend into the server's actual
+request path: every scheduler tick it (1) drains up to `max_batch` pending
+requests from an MPSC consumer with *nonblocking* pops, (2) admits as many
+as there are free slots — new work joins mid-decode of older work — and
+(3) replies per-request the moment that request completes, while the rest of
+the batch keeps decoding. When fully idle it parks on a blocking pop instead
+of spinning.
+
+Wire protocol (JSON, NUL-padded to the channel's msg_size):
+    request:  {"id": str, "prompt": [int], "steps": int[, "eos": int]}
+    reply:    {"id": str, "tokens": [int], "finish_reason": str}
+
+Oversized encodings raise `ChannelMessageTooLargeError` instead of silently
+corrupting the ring (`ljust` cannot shrink a payload).
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Optional
+
+from repro.frontends.channels import ChannelMessageTooLargeError
+
+from .scheduler import ContinuousBatchingScheduler, FinishedRequest, Request
+
+
+class ChannelServer:
+    """Consumes requests from a channel consumer (`try_pop`/`pop`/`depth`)
+    and posts replies through `reply_sender.push(bytes)` — typically a
+    per-client router over SPSC reply channels."""
+
+    def __init__(
+        self,
+        scheduler: ContinuousBatchingScheduler,
+        consumer,
+        reply_sender,
+        *,
+        msg_size: int = 1024,
+        idle_timeout: float = 60.0,
+    ):
+        self.scheduler = scheduler
+        self.consumer = consumer
+        self.reply = reply_sender
+        self.msg_size = msg_size
+        self.idle_timeout = idle_timeout
+
+    # -- wire codecs ---------------------------------------------------------
+    @staticmethod
+    def decode_request(raw: bytes) -> Request:
+        body = json.loads(bytes(raw).rstrip(b"\0").decode())
+        return Request(
+            rid=body["id"],
+            prompt=body["prompt"],
+            max_new_tokens=body["steps"],
+            eos_id=body.get("eos"),
+        )
+
+    def encode_reply(self, fin: FinishedRequest) -> bytes:
+        data = json.dumps(
+            {"id": fin.rid, "tokens": fin.tokens, "finish_reason": fin.finish_reason}
+        ).encode()
+        if len(data) > self.msg_size:
+            raise ChannelMessageTooLargeError(
+                f"reply for request {fin.rid!r} is {len(data)} bytes, channel "
+                f"msg_size is {self.msg_size}; raise msg_size or lower steps"
+            )
+        return data.ljust(self.msg_size, b"\0")
+
+    def encode_error(self, rid: Optional[str], message: str) -> bytes:
+        data = json.dumps({"id": rid, "error": message[: self.msg_size // 2]}).encode()
+        return data[: self.msg_size].ljust(self.msg_size, b"\0")
+
+    def _ingest(self, raw: bytes, backlog: "deque[Request]") -> int:
+        """Decode a wire message into the backlog. A malformed request gets
+        an error reply (when an id is recoverable) instead of killing the
+        server; returns how many requests this message settled (0 normally,
+        1 when it was rejected)."""
+        try:
+            backlog.append(self.decode_request(raw))
+            return 0
+        except Exception as e:  # noqa: BLE001 - any bad wire bytes
+            rid = None
+            try:
+                rid = json.loads(bytes(raw).rstrip(b"\0").decode()).get("id")
+            except Exception:  # noqa: BLE001 - not even JSON
+                pass
+            self.reply.push(self.encode_error(rid, f"bad request: {e}"))
+            return 1
+
+    # -- serve loop -----------------------------------------------------------
+    def serve(self, n_requests: int) -> int:
+        """Serve until `n_requests` requests are settled (replied, or
+        rejected with an error reply). Returns the number of scheduler
+        ticks spent."""
+        backlog: deque[Request] = deque()
+        settled = 0
+        while settled < n_requests:
+            # drain pending requests without blocking, up to one batch ahead
+            while len(backlog) < self.scheduler.max_batch:
+                raw = self.consumer.try_pop()
+                if raw is None:
+                    break
+                settled += self._ingest(raw, backlog)
+            # admit into every free slot; the rest stays backlogged
+            while backlog:
+                try:
+                    if not self.scheduler.try_admit(backlog[0]):
+                        break  # table full; keep backlogged
+                    backlog.popleft()
+                except ValueError as e:  # unservable (too long, dup id, ...)
+                    bad = backlog.popleft()
+                    self.reply.push(self.encode_error(bad.rid, str(e)))
+                    settled += 1
+            finished = self.scheduler.step()
+            for fin in finished:
+                try:
+                    self.reply.push(self.encode_reply(fin))
+                except ChannelMessageTooLargeError as e:
+                    self.reply.push(self.encode_error(fin.rid, str(e)))
+                settled += 1
+            if (
+                settled < n_requests
+                and not finished
+                and not backlog
+                and self.scheduler.active_count == 0
+            ):
+                # fully idle: park on the channel instead of spinning
+                settled += self._ingest(
+                    self.consumer.pop(timeout=self.idle_timeout), backlog
+                )
+        return self.scheduler.ticks

@@ -9,6 +9,7 @@ import pytest
 from repro.backends import coroutine, hostcpu
 from repro.backends.localsim import LocalSimWorld
 from repro.frontends.channels import (
+    ChannelMessageTooLargeError,
     MPSCLockingConsumer,
     MPSCLockingProducer,
     MPSCNonLockingConsumer,
@@ -129,6 +130,140 @@ class TestMPSC:
             for i in range(per)
         )
         assert results[0] == expected, "every message from every producer exactly once"
+        w.shutdown()
+
+
+class TestNonblockingIntrospection:
+    """try_push/try_pop never block; depth() exposes queue pressure — the
+    primitives the continuous-batching ChannelServer drains with."""
+
+    def test_depth_tracks_pushes_and_pops(self):
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:  # producer
+                prod = SPSCProducer(cm, mm, tag=1, capacity=8, msg_size=8)
+                for i in range(3):
+                    prod.push(i.to_bytes(8, "little"))
+                cm.exchange_global_memory_slots(99, {})  # pushes visible
+                d_full = prod.depth()
+                cm.exchange_global_memory_slots(98, {})  # consumer may now pop
+                cm.exchange_global_memory_slots(97, {})  # consumer popped 2
+                return (d_full, prod.depth())
+            cons = SPSCConsumer(cm, mm, tag=1, capacity=8, msg_size=8)
+            cm.exchange_global_memory_slots(99, {})
+            d_full = cons.depth()
+            cm.exchange_global_memory_slots(98, {})  # producer read its depth
+            assert cons.try_pop() is not None and cons.try_pop() is not None
+            d_after = cons.depth()
+            cm.exchange_global_memory_slots(97, {})
+            return (d_full, d_after)
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog)
+        assert results[0] == (3, 1), "producer-side depth (refreshes head)"
+        assert results[1] == (3, 1), "consumer-side depth"
+        w.shutdown()
+
+    def test_try_pop_empty_returns_none_immediately(self):
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:
+                prod = SPSCProducer(cm, mm, tag=2, capacity=4, msg_size=8)
+                cm.exchange_global_memory_slots(97, {})  # let consumer probe
+                prod.push(b"x" * 8)
+                return "sent"
+            cons = SPSCConsumer(cm, mm, tag=2, capacity=4, msg_size=8)
+            empty_probe = cons.try_pop()
+            cm.exchange_global_memory_slots(97, {})
+            return (empty_probe, cons.pop())
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog)
+        assert results[1] == (None, b"x" * 8)
+        w.shutdown()
+
+    def test_mpsc_consumer_depth_sums_rings(self):
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:
+                cons = MPSCNonLockingConsumer(cm, mm, tag=3, capacity=8, msg_size=8,
+                                              n_producers=2)
+                cm.exchange_global_memory_slots(96, {})  # all pushes landed
+                depth = cons.depth()
+                drained = sum(1 for _ in range(depth) if cons.try_pop() is not None)
+                return (depth, drained, cons.try_pop())
+            prod = MPSCNonLockingProducer(cm, mm, tag=3, capacity=8, msg_size=8,
+                                          producer_index=rank - 1)
+            for i in range(2):
+                prod.push(bytes([rank, i]) * 4)
+            cm.exchange_global_memory_slots(96, {})
+            return "sent"
+
+        w = LocalSimWorld(3)
+        results = w.launch(prog)
+        assert results[0] == (4, 4, None)
+        w.shutdown()
+
+    def test_locking_producer_depth_refreshes_shared_tail(self):
+        """MPSC locking producers share the tail counter: depth() must
+        re-read it, not trust the stale local copy (which would even go
+        negative once the consumer pops)."""
+
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:  # consumer
+                cons = MPSCLockingConsumer(cm, mm, tag=6, capacity=8, msg_size=8)
+                cm.exchange_global_memory_slots(95, {})  # A pushed 3
+                assert cons.try_pop() is not None
+                cm.exchange_global_memory_slots(94, {})  # popped 1
+                return "ok"
+            if rank == 1:  # producer A: does the pushing
+                prod = MPSCLockingProducer(cm, mm, tag=6, capacity=8, msg_size=8)
+                for i in range(3):
+                    prod.push(i.to_bytes(8, "little"))
+                cm.exchange_global_memory_slots(95, {})
+                cm.exchange_global_memory_slots(94, {})
+                return "ok"
+            # producer B: never pushed, local tail cache is stale (0)
+            prod = MPSCLockingProducer(cm, mm, tag=6, capacity=8, msg_size=8)
+            cm.exchange_global_memory_slots(95, {})
+            cm.exchange_global_memory_slots(94, {})
+            return prod.depth()
+
+        w = LocalSimWorld(3)
+        results = w.launch(prog)
+        assert results[2] == 2, "3 pushed - 1 popped, seen from the idle producer"
+        w.shutdown()
+
+    @pytest.mark.parametrize("locking", [True, False])
+    def test_oversized_message_raises(self, locking):
+        """Satellite bugfix: a payload larger than msg_size raises instead of
+        corrupting the ring."""
+
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:
+                if locking:
+                    prod = MPSCLockingProducer(cm, mm, tag=4, capacity=4, msg_size=8)
+                else:
+                    prod = SPSCProducer(cm, mm, tag=4, capacity=4, msg_size=8)
+                try:
+                    prod.try_push(b"y" * 9)
+                    outcome = "no error"
+                except ChannelMessageTooLargeError:
+                    outcome = "raised"
+                prod.push(b"z" * 8)  # channel still usable afterwards
+                return outcome
+            if locking:
+                cons = MPSCLockingConsumer(cm, mm, tag=4, capacity=4, msg_size=8)
+            else:
+                cons = SPSCConsumer(cm, mm, tag=4, capacity=4, msg_size=8)
+            return cons.pop()
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog)
+        assert results[0] == "raised"
+        assert results[1] == b"z" * 8
         w.shutdown()
 
 

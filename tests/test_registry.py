@@ -1,0 +1,98 @@
+"""Backend registry (`core/registry.py`) and the `Runtime` facade
+(`core/runtime.py`): build-by-name, the capability table, error paths, and
+backend-agnostic execution across hostcpu and jaxdev."""
+import pytest
+
+from repro.core import registry
+from repro.core.managers import (
+    CommunicationManager,
+    ComputeManager,
+    ManagerSet,
+    MemoryManager,
+    TopologyManager,
+)
+from repro.core.runtime import Runtime, RuntimeAssemblyError
+
+
+class TestRegistry:
+    def test_builtin_backends_available(self):
+        names = registry.available_backends()
+        for expected in ("hostcpu", "jaxdev", "localsim", "coroutine", "spmd", "tpu_spec"):
+            assert expected in names
+
+    def test_build_instantiates_manager_roles(self):
+        assert isinstance(registry.build("hostcpu", "compute"), ComputeManager)
+        assert isinstance(registry.build("hostcpu", "memory"), MemoryManager)
+        assert isinstance(registry.build("hostcpu", "topology"), TopologyManager)
+        assert isinstance(registry.build("hostcpu", "communication"), CommunicationManager)
+
+    def test_build_returns_fresh_instances(self):
+        assert registry.build("hostcpu", "compute") is not registry.build("hostcpu", "compute")
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(KeyError, match="unknown backend"):
+            registry.build("no-such-backend", "compute")
+
+    def test_unimplemented_role_raises(self):
+        # hostcpu is single-instance: no instance role (paper Table 1)
+        with pytest.raises(KeyError, match="does not implement role"):
+            registry.build("hostcpu", "instance")
+
+    def test_register_rejects_invalid_role(self):
+        with pytest.raises(ValueError, match="unknown manager role"):
+            registry.register_backend("bogus", {"turbo": object})
+
+    def test_capability_table_shape(self):
+        table = registry.capability_table()
+        assert set(table["hostcpu"]) == set(registry.ROLES)
+        assert table["hostcpu"]["compute"] is True
+        assert table["hostcpu"]["instance"] is False
+        assert table["localsim"]["instance"] is True
+        assert table["localsim"]["compute"] is False
+        assert table["tpu_spec"]["topology"] is True
+
+
+class TestRuntime:
+    @pytest.mark.parametrize("backend", ["hostcpu", "jaxdev"])
+    def test_executes_units_backend_agnostically(self, backend):
+        """The same application code runs unchanged on either backend —
+        the paper's switch-technologies-without-source-changes claim."""
+        rt = Runtime(backend)
+        unit = rt.create_execution_unit(lambda a, b: a * b + 1, name="mad")
+        assert int(rt.run(unit, 6, 7)) == 43
+        rt.finalize()
+
+    @pytest.mark.parametrize("backend", ["hostcpu", "jaxdev"])
+    def test_assembles_manager_set_from_registry(self, backend):
+        rt = Runtime(backend)
+        assert isinstance(rt.managers, ManagerSet)
+        assert isinstance(rt.compute_manager, ComputeManager)
+        assert isinstance(rt.memory_manager, MemoryManager)
+        assert rt.compute_manager.backend_name == backend
+        assert rt.query_topology().all_compute_resources()
+
+    def test_processing_unit_is_cached(self):
+        rt = Runtime("hostcpu")
+        assert rt.processing_unit is rt.processing_unit
+        rt.finalize()
+
+    def test_role_overrides_mix_backends(self):
+        # coroutine has no topology role; borrow hostcpu's (Table 1 mixing)
+        rt = Runtime("coroutine", overrides={"topology": "hostcpu"})
+        assert rt.compute_manager.backend_name == "coroutine"
+        assert rt.query_topology().all_compute_resources()
+
+    def test_missing_topology_role_raises(self):
+        rt = Runtime("coroutine")
+        with pytest.raises(RuntimeAssemblyError, match="no topology role"):
+            rt.query_topology()
+
+    def test_missing_compute_role_raises(self):
+        rt = Runtime("tpu_spec")
+        with pytest.raises(RuntimeAssemblyError, match="no compute role"):
+            rt.compute_manager
+
+    def test_context_requiring_backend_raises_helpfully(self):
+        # localsim factories need a world handle at launch time
+        with pytest.raises(RuntimeAssemblyError, match="launch-time context"):
+            Runtime("localsim")

@@ -1,5 +1,6 @@
-"""Serving engine: greedy generation determinism, prefill/decode cache
-headroom, and the Channels-driven request front door over localsim."""
+"""Serving stack: serial engine determinism, continuous-batching scheduler
+(slot table, mid-decode admission, eviction), and the Channels-driven
+request front door over localsim."""
 import json
 
 import jax
@@ -7,15 +8,25 @@ import numpy as np
 import pytest
 
 from repro.configs import ShapeConfig, get_config
+from repro.core.runtime import Runtime
+from repro.frontends.channels import ChannelMessageTooLargeError
 from repro.models import build
-from repro.serve.engine import ChannelServer, ServeEngine
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler, FinishedRequest, Request
+from repro.serve.server import ChannelServer
 
 
 @pytest.fixture(scope="module")
-def engine():
+def bundle():
     cfg = get_config("gemma3-1b", reduced=True)
     model = build(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def engine(bundle):
+    _, model, params = bundle
     return ServeEngine(model, params, max_len=64)
 
 
@@ -55,12 +66,139 @@ class TestServeEngine:
         result = eng.generate(prompts, steps=20)  # 4 + 20 < 40: all in cache
         assert result.tokens.shape == (1, 20)
 
+    def test_engine_runs_on_hostcpu_runtime(self, bundle):
+        """Backend swap through the Runtime facade: same engine code, hostcpu
+        compute manager (unjitted python-callable path)."""
+        _, model, params = bundle
+        eng = ServeEngine(model, params, max_len=16, runtime=Runtime("hostcpu"))
+        prompts = np.array([[1, 2, 3]], dtype=np.int32)
+        assert eng.generate(prompts, steps=2).tokens.shape == (1, 2)
+
+
+def _workload(cfg, n, *, seed=0, lo_p=3, hi_p=12, lo_s=2, hi_s=14):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(lo_p, hi_p))
+        steps = int(rng.integers(lo_s, hi_s))
+        prompt = rng.integers(1, cfg.vocab_size, (plen,)).tolist()
+        reqs.append(Request(rid=f"r{seed}-{i}", prompt=prompt, max_new_tokens=steps))
+    return reqs
+
+
+class TestContinuousBatchingScheduler:
+    def test_matches_serial_engine_tokens(self, bundle, engine):
+        """Continuous batching is a scheduling change, not a model change:
+        every request's tokens equal the serial engine's output."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=4, max_len=64)
+        reqs = _workload(cfg, 6)
+        results = sched.serve(reqs)
+        for r in reqs:
+            serial = engine.generate(
+                np.asarray([r.prompt], dtype=np.int32), steps=r.max_new_tokens
+            ).tokens[0].tolist()
+            assert results[r.rid].tokens == serial, r.rid
+
+    def test_eight_concurrent_requests_varied_lengths(self, bundle):
+        """Acceptance shape: >= 8 requests of different prompt/decode lengths
+        in flight concurrently on an 8-slot table."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=8, max_len=64)
+        reqs = _workload(cfg, 8, lo_s=6, hi_s=14)
+        assert len({len(r.prompt) for r in reqs}) > 1
+        for r in reqs:
+            assert sched.try_admit(r)
+        assert sched.active_count == 8 and sched.free_slots == 0
+        results = {}
+        while len(results) < 8:
+            for fin in sched.step():
+                results[fin.rid] = fin
+        for r in reqs:
+            assert len(results[r.rid].tokens) == r.max_new_tokens
+            assert results[r.rid].finish_reason == "length"
+
+    def test_admission_mid_decode(self, bundle, engine):
+        """A request admitted while others are mid-decode joins the running
+        batch without perturbing their outputs."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=4, max_len=64)
+        early = _workload(cfg, 2, seed=1, lo_s=8, hi_s=9)
+        late = _workload(cfg, 1, seed=2, lo_s=4, hi_s=5)[0]
+        for r in early:
+            assert sched.try_admit(r)
+        results = {}
+        for fin in sched.step():  # early requests are now mid-decode
+            results[fin.rid] = fin
+        assert sched.try_admit(late)
+        assert sched.active_count == 3
+        while len(results) < 3:
+            for fin in sched.step():
+                results[fin.rid] = fin
+        for r in early + [late]:
+            serial = engine.generate(
+                np.asarray([r.prompt], dtype=np.int32), steps=r.max_new_tokens
+            ).tokens[0].tolist()
+            assert results[r.rid].tokens == serial
+
+    def test_slots_are_recycled(self, bundle):
+        """Eviction frees the slot for the next admission: more requests than
+        slots complete on a small table."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=64)
+        reqs = _workload(cfg, 7, seed=3)
+        results = sched.serve(reqs)
+        assert set(results) == {r.rid for r in reqs}
+        assert sched.active_count == 0 and sched.free_slots == 2
+
+    def test_admission_denied_when_full_then_allowed(self, bundle):
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=64)
+        reqs = _workload(cfg, 3, seed=4, lo_s=3, hi_s=4)
+        assert sched.try_admit(reqs[0])
+        assert sched.try_admit(reqs[1])
+        assert not sched.try_admit(reqs[2])  # table full
+        done = []
+        while not done:
+            done = sched.step()
+        assert sched.try_admit(reqs[2])  # freed slot is reusable
+
+    def test_eos_evicts_early(self, bundle, engine):
+        """A request whose greedy chain hits eos_id finishes with reason
+        'eos' and a shortened token list."""
+        cfg, model, params = bundle
+        prompt = [7, 3, 9, 1]
+        serial = engine.generate(np.asarray([prompt], dtype=np.int32), steps=8)
+        chain = serial.tokens[0].tolist()
+        eos = chain[3]  # the greedy chain may repeat: stop at FIRST occurrence
+        stop = chain.index(eos)
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=64)
+        results = sched.serve(
+            [Request(rid="e", prompt=prompt, max_new_tokens=8, eos_id=eos)]
+        )
+        assert results["e"].finish_reason == "eos"
+        assert results["e"].tokens == chain[: stop + 1]
+
+    def test_single_token_request_bypasses_slots(self, bundle):
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=64)
+        assert sched.try_admit(Request(rid="one", prompt=[1, 2, 3], max_new_tokens=1))
+        assert sched.active_count == 0  # finished at prefill, no slot taken
+        [fin] = sched.step()
+        assert fin.rid == "one" and len(fin.tokens) == 1
+
+    def test_oversized_request_rejected(self, bundle):
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=16)
+        with pytest.raises(ValueError, match="cache positions"):
+            sched.try_admit(Request(rid="big", prompt=[1] * 10, max_new_tokens=10))
+
 
 class TestChannelServer:
-    def test_requests_over_mpsc_channel(self):
-        """Two producer instances submit prompts; one server instance
-        consumes, generates, and replies — the paper's Channels frontend
-        doing real serving work."""
+    def test_requests_over_mpsc_channel_continuous(self):
+        """Two producer instances stream 2 requests each; one server instance
+        drains the MPSC channel per scheduler tick, decodes them as one
+        continuously-batched stream, and replies per-request on completion."""
         from repro.backends.localsim import LocalSimWorld
         from repro.frontends.channels import (
             MPSCNonLockingConsumer,
@@ -73,6 +211,7 @@ class TestChannelServer:
         model = build(cfg)
         params, _ = model.init(jax.random.PRNGKey(0))
         MSG = 512
+        PER_CLIENT = 2
 
         def prog(mgrs, rank):
             # NOTE: slot exchange is COLLECTIVE (paper §3.1.4) — every
@@ -83,17 +222,20 @@ class TestChannelServer:
             if rank == 0:  # server
                 req_cons = MPSCNonLockingConsumer(cm, mm, tag=1, capacity=4,
                                                   msg_size=MSG, n_producers=2)
-                rep_prod_1 = SPSCProducer(cm, mm, tag=10, capacity=4, msg_size=MSG)
-                rep_prod_2 = SPSCProducer(cm, mm, tag=11, capacity=4, msg_size=MSG)
-                engine = ServeEngine(model, params, max_len=64)
+                rep_prods = {
+                    "c1": SPSCProducer(cm, mm, tag=10, capacity=4, msg_size=MSG),
+                    "c2": SPSCProducer(cm, mm, tag=11, capacity=4, msg_size=MSG),
+                }
 
                 class Router:
                     def push(self, msg):
                         rep = json.loads(bytes(msg).rstrip(b"\0").decode())
-                        (rep_prod_1 if rep["id"] == "c1" else rep_prod_2).push(msg)
+                        rep_prods[rep["id"].split("-")[0]].push(msg)
 
-                server = ChannelServer(engine, req_cons, Router(), msg_size=MSG)
-                server.serve(n_requests=2)
+                sched = ContinuousBatchingScheduler(model, params, max_batch=4,
+                                                    max_len=32)
+                server = ChannelServer(sched, req_cons, Router(), msg_size=MSG)
+                server.serve(n_requests=2 * PER_CLIENT)
                 return "served"
             # clients
             cidx = rank - 1
@@ -105,14 +247,105 @@ class TestChannelServer:
             else:
                 cm.exchange_global_memory_slots(10, {})  # not an endpoint
                 rep_cons = SPSCConsumer(cm, mm, tag=11, capacity=4, msg_size=MSG)
-            req = {"id": f"c{rank}", "prompt": [1 + rank, 2, 3, 4], "steps": 3}
-            prod.push(json.dumps(req).encode().ljust(MSG, b"\0"))
-            rep = json.loads(rep_cons.pop(timeout=240).rstrip(b"\0").decode())
-            assert rep["id"] == f"c{rank}"
-            return rep["tokens"]
+            for j in range(PER_CLIENT):
+                req = {"id": f"c{rank}-{j}", "prompt": [1 + rank, 2, 3, 4 + j],
+                       "steps": 3 + j}
+                prod.push(json.dumps(req).encode().ljust(MSG, b"\0"))
+            got = {}
+            while len(got) < PER_CLIENT:  # completion order, match by id
+                rep = json.loads(rep_cons.pop(timeout=240).rstrip(b"\0").decode())
+                assert rep["id"].startswith(f"c{rank}-")
+                got[rep["id"]] = rep["tokens"]
+            return got
 
         w = LocalSimWorld(3)
         results = w.launch(prog, timeout=300)
         assert results[0] == "served"
-        assert len(results[1]) == 3 and len(results[2]) == 3
+        for rank in (1, 2):
+            assert set(results[rank]) == {f"c{rank}-{j}" for j in range(PER_CLIENT)}
+            for j in range(PER_CLIENT):
+                assert len(results[rank][f"c{rank}-{j}"]) == 3 + j
         w.shutdown()
+
+    def test_oversized_reply_raises(self, bundle):
+        """Satellite bugfix: an encoded reply larger than msg_size must raise
+        instead of silently corrupting the ring (ljust cannot shrink)."""
+        _, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=64)
+        server = ChannelServer(sched, consumer=None, reply_sender=None, msg_size=32)
+        fin = FinishedRequest(rid="big", prompt=[1], tokens=list(range(100)),
+                              finish_reason="length")
+        with pytest.raises(ChannelMessageTooLargeError, match="msg_size"):
+            server.encode_reply(fin)
+
+    def test_reply_fits_is_padded(self, bundle):
+        _, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=64)
+        server = ChannelServer(sched, consumer=None, reply_sender=None, msg_size=128)
+        fin = FinishedRequest(rid="ok", prompt=[1], tokens=[1, 2, 3],
+                              finish_reason="length")
+        wire = server.encode_reply(fin)
+        assert len(wire) == 128
+        body = json.loads(wire.rstrip(b"\0").decode())
+        assert body == {"id": "ok", "tokens": [1, 2, 3], "finish_reason": "length"}
+
+    def test_request_decode_roundtrip(self):
+        raw = json.dumps({"id": "x", "prompt": [1, 2], "steps": 4, "eos": 7}
+                         ).encode().ljust(64, b"\0")
+        req = ChannelServer.decode_request(raw)
+        assert (req.rid, list(req.prompt), req.max_new_tokens, req.eos_id) == \
+            ("x", [1, 2], 4, 7)
+
+    def test_bad_requests_get_error_replies_not_crashes(self, bundle):
+        """Resilience: a malformed or unservable request settles with an
+        error reply instead of killing the server loop; later requests are
+        still served."""
+        from collections import deque
+
+        class FakeConsumer:
+            def __init__(self, msgs):
+                self.msgs = deque(msgs)
+
+            def try_pop(self):
+                return self.msgs.popleft() if self.msgs else None
+
+            def pop(self, timeout=None):
+                if not self.msgs:
+                    raise TimeoutError("empty")
+                return self.msgs.popleft()
+
+        class FakeReply:
+            def __init__(self):
+                self.out = []
+
+            def push(self, data):
+                self.out.append(json.loads(bytes(data).rstrip(b"\0").decode()))
+
+        _, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=16)
+        msgs = [
+            b"}{garbage".ljust(128, b"\0"),  # not JSON at all
+            json.dumps({"id": "huge", "prompt": [1] * 10, "steps": 10}
+                       ).encode().ljust(128, b"\0"),  # exceeds max_len
+            json.dumps({"id": "good", "prompt": [1, 2, 3], "steps": 2}
+                       ).encode().ljust(128, b"\0"),
+        ]
+        reply = FakeReply()
+        ChannelServer(sched, FakeConsumer(msgs), reply, msg_size=128).serve(3)
+        by_id = {r["id"]: r for r in reply.out}
+        assert "bad request" in by_id[None]["error"]
+        assert "cache positions" in by_id["huge"]["error"]
+        assert len(by_id["good"]["tokens"]) == 2
+
+
+class TestSchedulerServeDriver:
+    def test_duplicate_rids_do_not_hang(self, bundle):
+        """serve() terminates by finish count, not distinct rids."""
+        _, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=64)
+        twins = [
+            Request(rid="same", prompt=[1, 2, 3], max_new_tokens=1),
+            Request(rid="same", prompt=[4, 5, 6], max_new_tokens=1),
+        ]
+        results = sched.serve(twins)  # both finish at prefill; keyed dict keeps one
+        assert set(results) == {"same"} and len(results["same"].tokens) == 1
