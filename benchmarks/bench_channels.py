@@ -51,11 +51,15 @@ def measure(mode: str, msg_size: int, *, rounds: int) -> float:
         w.shutdown()
 
 
-def run(csv_writer=None) -> list[dict]:
+def run(csv_writer=None, *, smoke: bool = False) -> list[dict]:
     sizes = [1, 64, 1024, 16 * 1024, 256 * 1024, 4 * 1024 * 1024]
+    if smoke:
+        sizes = [64, 16 * 1024]
     rows = []
     for size in sizes:
         rounds = max(4, min(200, (1 << 22) // max(size, 256)))
+        if smoke:
+            rounds = min(rounds, 16)
         g_rdma = measure("rdma", size, rounds=rounds)
         g_rdv = measure("rendezvous", size, rounds=rounds)
         row = {

@@ -11,7 +11,8 @@ from repro.apps import mlp_inference
 from repro.backends import hostcpu, jaxdev
 
 
-def run(csv_writer=None) -> list[dict]:
+def run(csv_writer=None, *, smoke: bool = False) -> list[dict]:
+    n_test = 200 if smoke else 2000
     weights = mlp_inference.train_weights()
     host_topo = hostcpu.HostTopologyManager().query_topology()
     jax_topo = jaxdev.JaxTopologyManager().query_topology()
@@ -22,7 +23,7 @@ def run(csv_writer=None) -> list[dict]:
     ]
     rows = []
     for device, cm, res, kernel in combos:
-        out = mlp_inference.run_inference(cm, res, kernel=kernel, weights=weights, n_test=2000)
+        out = mlp_inference.run_inference(cm, res, kernel=kernel, weights=weights, n_test=n_test)
         row = {
             "bench": "heterogeneous_inference",
             "device": device,

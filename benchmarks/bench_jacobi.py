@@ -13,7 +13,9 @@ import numpy as np
 from repro.apps import jacobi
 
 
-def run(csv_writer=None, *, base: int = 48, iters: int = 10) -> list[dict]:
+def run(csv_writer=None, *, base: int = 48, iters: int = 10, smoke: bool = False) -> list[dict]:
+    if smoke:
+        base, iters = 24, 4
     rows = []
 
     # -- Fig. 10 analog: single instance, tasked blocks ---------------------

@@ -49,12 +49,16 @@ def _rows_from_dir(d: str) -> list[dict]:
     return rows
 
 
-def run(csv_writer=None) -> list[dict]:
+def run(csv_writer=None, *, smoke: bool = False) -> list[dict]:
     for d in RECORD_DIRS:
         if os.path.isdir(d) and os.listdir(d):
             rows = _rows_from_dir(d)
             break
     else:
+        if smoke:
+            # smoke mode never pays for fallback dryrun compiles
+            print("[roofline] no dryrun records present; skipping in smoke mode")
+            return []
         # fallback: compile a few representative cells at 4x4
         tmp = "experiments/dryrun_bench_fallback"
         env = dict(os.environ, PYTHONPATH="src")

@@ -7,11 +7,14 @@ t=0) through both serve paths:
 * continuous — `ContinuousBatchingScheduler`, admit-on-free-slot, one
   vmapped decode tick across all active slots.
 
-Reports aggregate decode tokens/s and per-request latency (submission at
-t=0 to reply, i.e. queueing included — the number a client sees). Both
-paths run a warmup pass first so jit compilation is excluded. Writes
-benchmarks/BENCH_serve.json and contributes rows to benchmarks/results.csv
-via benchmarks/run.py.
+Reports aggregate decode tokens/s, per-request latency (submission at t=0 to
+reply, i.e. queueing included — the number a client sees), and
+**time-to-first-token** (submission to the first output token existing —
+what a streaming client perceives as responsiveness: serial requests wait
+for every earlier request to fully finish before their prefill, continuous
+requests get their first token at admission). Both paths run a warmup pass
+first so jit compilation is excluded. Writes benchmarks/BENCH_serve.json and
+contributes rows to benchmarks/results.csv via benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -36,22 +39,26 @@ PROMPT_RANGE = (4, 12)
 STEPS_RANGE = (8, 24)
 
 
-def _latency_stats(latencies):
-    arr = np.asarray(sorted(latencies))
+def _stats(values, prefix):
+    arr = np.asarray(sorted(values))
     return {
-        "latency_mean_s": round(float(arr.mean()), 4),
-        "latency_p50_s": round(float(np.percentile(arr, 50)), 4),
-        "latency_p95_s": round(float(np.percentile(arr, 95)), 4),
+        f"{prefix}_mean_s": round(float(arr.mean()), 4),
+        f"{prefix}_p50_s": round(float(np.percentile(arr, 50)), 4),
+        f"{prefix}_p95_s": round(float(np.percentile(arr, 95)), 4),
     }
 
 
 def _run_serial(engine, requests):
     t0 = time.monotonic()
-    latencies = []
+    latencies, ttfts = [], []
     for r in requests:
-        engine.generate(np.asarray([r.prompt], dtype=np.int32), steps=r.max_new_tokens)
+        engine.generate(
+            np.asarray([r.prompt], dtype=np.int32),
+            steps=r.max_new_tokens,
+            on_first_token=lambda: ttfts.append(time.monotonic() - t0),
+        )
         latencies.append(time.monotonic() - t0)  # queued since t0
-    return time.monotonic() - t0, latencies
+    return time.monotonic() - t0, latencies, ttfts
 
 
 def _run_continuous(sched, requests):
@@ -59,62 +66,78 @@ def _run_continuous(sched, requests):
 
     backlog = deque(requests)
     t0 = time.monotonic()
-    latencies = []
+    latencies, ttfts = [], []
     n_done = 0
     while n_done < len(requests):
         while backlog and sched.try_admit(backlog[0]):
             backlog.popleft()
+            # admission runs the prefill: the request's first token exists now
+            ttfts.append(time.monotonic() - t0)
         for _fin in sched.step():
             latencies.append(time.monotonic() - t0)
             n_done += 1
-    return time.monotonic() - t0, latencies
+    return time.monotonic() - t0, latencies, ttfts
 
 
-def run(csv_writer=None) -> list[dict]:
+def run(csv_writer=None, *, smoke: bool = False) -> list[dict]:
+    n_requests = 4 if smoke else N_REQUESTS
+    steps_range = (4, 8) if smoke else STEPS_RANGE
     cfg = get_config(ARCH, reduced=True)
     model = build(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
-    max_len = PROMPT_RANGE[1] + STEPS_RANGE[1] + 1
-    runtime = Runtime("jaxdev")
+    max_len = PROMPT_RANGE[1] + steps_range[1] + 1
     requests = synthetic_requests(
-        cfg.vocab_size, N_REQUESTS, prompt_range=PROMPT_RANGE, steps_range=STEPS_RANGE
+        cfg.vocab_size, n_requests, prompt_range=PROMPT_RANGE, steps_range=steps_range
     )
     total_tokens = sum(r.max_new_tokens for r in requests)
 
-    engine = ServeEngine(model, params, max_len=max_len, runtime=runtime)
-    sched = ContinuousBatchingScheduler(
-        model, params, max_batch=MAX_BATCH, max_len=max_len, runtime=runtime
-    )
+    with Runtime("jaxdev") as runtime:
+        engine = ServeEngine(model, params, max_len=max_len, runtime=runtime)
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=MAX_BATCH, max_len=max_len, runtime=runtime
+        )
 
-    # warmup: compile prefill (per distinct prompt length) and decode units
-    _run_serial(engine, requests)
-    _run_continuous(sched, requests)
+        # warmup: compile prefill (per distinct prompt length) and decode units
+        _run_serial(engine, requests)
+        _run_continuous(sched, requests)
 
-    rows = []
-    for mode, runner, target in (
-        ("serial", _run_serial, engine),
-        ("continuous", _run_continuous, sched),
-    ):
-        wall, latencies = runner(target, requests)
-        row = {
-            "bench": "serve",
-            "mode": mode,
-            "arch": ARCH,
-            "n_requests": N_REQUESTS,
-            "max_batch": MAX_BATCH if mode == "continuous" else 1,
-            "total_decode_tokens": total_tokens,
-            "wall_s": round(wall, 4),
-            "tokens_per_s": round(total_tokens / wall, 2),
-            **_latency_stats(latencies),
-        }
-        rows.append(row)
-        print(f"[serve] {mode:<10} {row['tokens_per_s']:>8.1f} tok/s  "
-              f"wall={row['wall_s']:.2f}s  p50={row['latency_p50_s']:.2f}s  "
-              f"p95={row['latency_p95_s']:.2f}s")
+        rows = []
+        for mode, runner, target in (
+            ("serial", _run_serial, engine),
+            ("continuous", _run_continuous, sched),
+        ):
+            wall, latencies, ttfts = runner(target, requests)
+            row = {
+                "bench": "serve",
+                "mode": mode,
+                "arch": ARCH,
+                "n_requests": n_requests,
+                "max_batch": MAX_BATCH if mode == "continuous" else 1,
+                "total_decode_tokens": total_tokens,
+                "wall_s": round(wall, 4),
+                "tokens_per_s": round(total_tokens / wall, 2),
+                **_stats(latencies, "latency"),
+                **_stats(ttfts, "ttft"),
+            }
+            rows.append(row)
+            print(f"[serve] {mode:<10} {row['tokens_per_s']:>8.1f} tok/s  "
+                  f"wall={row['wall_s']:.2f}s  p50={row['latency_p50_s']:.2f}s  "
+                  f"p95={row['latency_p95_s']:.2f}s  ttft_mean={row['ttft_mean_s']:.3f}s")
 
     speedup = rows[1]["tokens_per_s"] / rows[0]["tokens_per_s"]
-    print(f"[serve] continuous/serial aggregate speedup: {speedup:.2f}x")
-    out = {"rows": rows, "speedup_continuous_vs_serial": round(speedup, 3)}
+    ttft_ratio = rows[0]["ttft_mean_s"] / max(rows[1]["ttft_mean_s"], 1e-9)
+    print(f"[serve] continuous/serial aggregate speedup: {speedup:.2f}x, "
+          f"serial/continuous mean-TTFT ratio: {ttft_ratio:.2f}x")
+    if smoke:
+        # smoke runs verify the script, they are not reference numbers:
+        # never overwrite the tracked BENCH_serve.json with them
+        print("[serve] smoke mode: skipping BENCH_serve.json write")
+        return rows
+    out = {
+        "rows": rows,
+        "speedup_continuous_vs_serial": round(speedup, 3),
+        "ttft_serial_over_continuous": round(ttft_ratio, 3),
+    }
     path = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)

@@ -11,7 +11,9 @@ from __future__ import annotations
 from repro.apps import fibonacci
 
 
-def run(csv_writer=None, *, n: int = 18, workers: int = 8) -> list[dict]:
+def run(csv_writer=None, *, n: int = 18, workers: int = 8, smoke: bool = False) -> list[dict]:
+    if smoke:
+        n, workers = 12, 4
     rows = []
     for manager in ("coroutine", "threads"):
         out = fibonacci.run_fibonacci(n, workers=workers, task_manager=manager)

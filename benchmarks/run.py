@@ -2,6 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run channels   # one
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny configs,
+                                                       # verifies the scripts
+                                                       # still run end-to-end
 
 Paper artifact map:
     bench_channels     -> Fig. 8   (ping-pong goodput, 2 comm backends)
@@ -38,12 +41,14 @@ ALL = {
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    args = [a for a in sys.argv[1:]]
+    smoke = "--smoke" in args
+    names = [a for a in args if not a.startswith("--")] or list(ALL)
     all_rows: list[dict] = []
     for name in names:
-        print(f"=== bench: {name} ===")
+        print(f"=== bench: {name}{' (smoke)' if smoke else ''} ===")
         t0 = time.monotonic()
-        rows = ALL[name]()
+        rows = ALL[name](smoke=smoke) if smoke else ALL[name]()
         print(f"=== {name}: {len(rows)} rows in {time.monotonic() - t0:.1f}s ===\n")
         all_rows.extend(rows)
 
@@ -52,11 +57,12 @@ def main() -> None:
         for k in row:
             if k not in fields:
                 fields.append(k)
-    with open("benchmarks/results.csv", "w", newline="") as f:
+    out = "benchmarks/results_smoke.csv" if smoke else "benchmarks/results.csv"
+    with open(out, "w", newline="") as f:
         writer = csv.DictWriter(f, fieldnames=fields)
         writer.writeheader()
         writer.writerows(all_rows)
-    print(f"wrote benchmarks/results.csv ({len(all_rows)} rows)")
+    print(f"wrote {out} ({len(all_rows)} rows)")
 
 
 if __name__ == "__main__":

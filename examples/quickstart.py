@@ -58,6 +58,33 @@ print(f"Fig.6: parallel execution on {len(pus)} cores ->",
       [s.get_result() for s in states])
 
 # ---------------------------------------------------------------------------
+# The unified async completion API: a context-managed Runtime (its default
+# processing unit is finalized on exit — never leaked), futures from
+# submit(), transfer events from memcpy(), and wait_all/wait_any to
+# multiplex them. §3.1.4-3.1.5: completion is NOT guaranteed when the call
+# returns; these objects are how you ask.
+# ---------------------------------------------------------------------------
+from repro.core import Runtime, wait_all, wait_any
+
+with Runtime("hostcpu") as rt:
+    square = rt.create_execution_unit(lambda i: i * i, name="square")
+    futures = [rt.submit(square, i) for i in range(6)]
+    first = wait_any(futures)          # whichever the OS scheduler ran first
+    wait_all(futures)                  # barrier over the rest
+    print(f"\nasync API: submit -> futures -> wait_all ->",
+          [f.result() for f in futures], f"(first done: {first.result()})")
+
+    mm2, cmm2 = rt.memory_manager, rt.communication_manager
+    a = mm2.allocate_local_memory_slot(mm2.memory_spaces()[0], 64)
+    b = mm2.allocate_local_memory_slot(mm2.memory_spaces()[0], 64)
+    a.handle[:6] = np.frombuffer(b"events", dtype=np.uint8)
+    transfer = cmm2.memcpy(b, 0, a, 0, 64)   # an Event, not a blind wait
+    transfer.add_callback(lambda ev: print(f"async API: transfer {ev.name} completed"))
+    transfer.wait()
+    assert bytes(b.handle[:6]) == b"events"
+# rt.finalize() ran on exit: the default PU's worker thread is gone
+
+# ---------------------------------------------------------------------------
 # Fig. 7 — instance management: top up the world to `desired` instances at
 # runtime (elastic path, localsim backend standing in for a cloud API)
 # ---------------------------------------------------------------------------

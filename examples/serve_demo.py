@@ -1,8 +1,10 @@
 """Continuous-batching serving demo with the request front door on HiCR
 channels: two producer instances stream requests of different prompt/decode
 lengths into an MPSC channel; one server instance drains them per scheduler
-tick, interleaves prefill/decode across slots, and replies per-request on
-completion over per-client SPSC channels (localsim fabric, 3 instances).
+tick, interleaves prefill/decode across slots, and **streams** replies over
+per-client SPSC channels (localsim fabric, 3 instances) — delta chunks every
+`STREAM_INTERVAL` decode ticks, terminal chunk on completion, so clients see
+tokens while their request is still decoding.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -30,6 +32,7 @@ params, _ = model.init(jax.random.PRNGKey(0))
 MSG = 512
 N_CLIENTS = 2
 REQS_PER_CLIENT = 3
+STREAM_INTERVAL = 2  # delta chunk every 2 decode ticks
 
 
 def client_requests(rank):
@@ -64,10 +67,12 @@ def program(mgrs, rank):
                 body = json.loads(bytes(msg).rstrip(b"\0").decode())
                 reply_chans[body["id"].split("-")[0]].push(msg)
 
-        sched = ContinuousBatchingScheduler(model, params, max_batch=4, max_len=32,
-                                            runtime=Runtime("jaxdev"))
-        server = ChannelServer(sched, req, Router(), msg_size=MSG)
-        ticks = server.serve(n_requests=N_CLIENTS * REQS_PER_CLIENT)
+        with Runtime("jaxdev") as rt:
+            sched = ContinuousBatchingScheduler(model, params, max_batch=4,
+                                                max_len=32, runtime=rt)
+            server = ChannelServer(sched, req, Router(), msg_size=MSG,
+                                   stream_interval=STREAM_INTERVAL)
+            ticks = server.serve(n_requests=N_CLIENTS * REQS_PER_CLIENT)
         return f"served {N_CLIENTS * REQS_PER_CLIENT} requests in {ticks} decode ticks"
     # a client instance
     cidx = rank - 1
@@ -82,19 +87,26 @@ def program(mgrs, rank):
     reqs = client_requests(rank)
     for r in reqs:
         prod.push(json.dumps(r).encode().ljust(MSG, b"\0"))
-    got = {}
-    while len(got) < len(reqs):  # replies arrive in completion order
-        rep = json.loads(reply.pop(timeout=300).rstrip(b"\0").decode())
-        got[rep["id"]] = rep["tokens"]
-    return got
+    # Streaming client: reassemble each request's tokens from delta chunks
+    # (chunks of one id arrive in order; ids interleave freely).
+    got, chunks, done = {}, {}, set()
+    while len(done) < len(reqs):
+        chunk = json.loads(reply.pop(timeout=300).rstrip(b"\0").decode())
+        rid = chunk["id"]
+        got.setdefault(rid, []).extend(chunk["delta"])
+        chunks[rid] = chunks.get(rid, 0) + 1
+        if chunk["done"]:
+            done.add(rid)
+    return {rid: (toks, chunks[rid]) for rid, toks in got.items()}
 
 
 print(f"continuous-batching serve: {N_CLIENTS} producers x {REQS_PER_CLIENT} "
-      "requests -> MPSC -> scheduler -> per-client replies")
+      f"requests -> MPSC -> scheduler -> per-client streaming replies "
+      f"(delta every {STREAM_INTERVAL} ticks)")
 world = LocalSimWorld(1 + N_CLIENTS)
 results = world.launch(program, timeout=600)
 world.shutdown()
 print(f"server: {results[0]}")
 for rank in range(1, 1 + N_CLIENTS):
-    for rid, tokens in sorted(results[rank].items()):
-        print(f"  {rid}: {tokens}")
+    for rid, (tokens, n_chunks) in sorted(results[rank].items()):
+        print(f"  {rid}: {tokens} ({n_chunks} chunks)")

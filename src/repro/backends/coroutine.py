@@ -19,6 +19,7 @@ from repro.core.definitions import (
     LifetimeError,
     ProcessingUnitStatus,
 )
+from repro.core.events import Future
 from repro.core.managers import ComputeManager
 from repro.core.stateful import ExecutionState, ProcessingUnit
 from repro.core.stateless import ComputeResource, ExecutionUnit
@@ -72,15 +73,17 @@ class CoroutineComputeManager(ComputeManager):
             state.mark_finished(error=e)
             return True
 
-    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> Future:
         """Run the coroutine to completion on the caller's context (stepping
-        through every suspension point)."""
+        through every suspension point). The returned Future is therefore
+        already resolved — coroutines have no independent thread of control."""
         pu.check_ready()
         pu.current_state = state
         pu.status = ProcessingUnitStatus.EXECUTING
         while not self.step(state):
             pass
         pu.status = ProcessingUnitStatus.READY
+        return state.future
 
     def execute_step(self, pu: ProcessingUnit, state: ExecutionState) -> bool:
         """Advance one suspension point only (used by tasking workers)."""

@@ -26,6 +26,7 @@ from repro.core.definitions import (
     MemorySpaceKind,
     ProcessingUnitStatus,
 )
+from repro.core.events import Event, Future
 from repro.core.managers import (
     CommunicationManager,
     ComputeManager,
@@ -141,14 +142,13 @@ class HostMemoryManager(MemoryManager):
 
 class HostCommunicationManager(CommunicationManager):
     """Local-to-Local memcpy over host buffers. Transfers are executed by a
-    background copier thread so that memcpy() is genuinely asynchronous and
-    fence() is meaningful (mutual-exclusion based, as in the paper)."""
+    background copier thread so that memcpy() is genuinely asynchronous: the
+    returned transfer Event is signalled by the copier once the bytes have
+    landed; fence() is the base-class wait over the tag's event set."""
 
     backend_name = "hostcpu"
 
     def __init__(self):
-        self._pending: dict[int, int] = {}
-        self._cv = threading.Condition()
         self._queue: "queue.Queue[tuple | None]" = queue.Queue()
         self._worker = threading.Thread(target=self._run, daemon=True, name="hostcpu-copier")
         self._worker.start()
@@ -158,17 +158,15 @@ class HostCommunicationManager(CommunicationManager):
             item = self._queue.get()
             if item is None:
                 return
-            dst, dst_off, src, src_off, size, tag = item
+            dst, dst_off, src, src_off, size, event = item
             dview = dst.handle.view(np.uint8).reshape(-1)
             sview = src.handle.view(np.uint8).reshape(-1)
             dview[dst.offset + dst_off : dst.offset + dst_off + size] = sview[
                 src.offset + src_off : src.offset + src_off + size
             ]
-            with self._cv:
-                self._pending[tag] -= 1
-                self._cv.notify_all()
+            event.set()
 
-    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size, tag: int = 0):
+    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size):
         if direction != MemcpyDirection.LOCAL_TO_LOCAL:
             raise InvalidMemcpyDirectionError(
                 "hostcpu communication manager only supports Local-to-Local"
@@ -177,13 +175,9 @@ class HostCommunicationManager(CommunicationManager):
         src.check_alive()
         if dst_off + size > dst.size_bytes or src_off + size > src.size_bytes:
             raise ValueError("memcpy out of slot bounds")
-        with self._cv:
-            self._pending[tag] = self._pending.get(tag, 0) + 1
-        self._queue.put((dst, dst_off, src, src_off, size, tag))
-
-    def fence(self, tag: int = 0) -> None:
-        with self._cv:
-            self._cv.wait_for(lambda: self._pending.get(tag, 0) == 0)
+        event = Event(name="hostcpu-memcpy")
+        self._queue.put((dst, dst_off, src, src_off, size, event))
+        return event
 
     def exchange_global_memory_slots(self, tag, local_slots):
         from repro.core.definitions import UnsupportedOperationError
@@ -242,19 +236,14 @@ class HostComputeManager(ComputeManager):
         worker.start()
         pu.status = ProcessingUnitStatus.READY
 
-    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> Future:
         pu.check_ready()
         if state.is_finished():
             raise LifetimeError("finished execution states cannot be re-used")
         pu.current_state = state
         pu.status = ProcessingUnitStatus.EXECUTING
         pu.context.inbox.put(state)
-
-    def await_(self, pu: ProcessingUnit) -> None:
-        state = pu.current_state
-        if state is not None:
-            state.wait()
-        pu.status = ProcessingUnitStatus.READY
+        return state.future
 
     def finalize(self, pu: ProcessingUnit) -> None:
         if pu.status == ProcessingUnitStatus.TERMINATED:

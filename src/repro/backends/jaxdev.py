@@ -27,6 +27,7 @@ from repro.core.definitions import (
     MemorySpaceKind,
     ProcessingUnitStatus,
 )
+from repro.core.events import Event, Future
 from repro.core.managers import (
     CommunicationManager,
     ComputeManager,
@@ -134,16 +135,26 @@ def _copy_region(dst: jax.Array, src: jax.Array, dst_off, src_off, size):
     return jax.lax.dynamic_update_slice(dst, chunk, (dst_off,))
 
 
+def _dispatch_event(value, *, name: str) -> Event:
+    """Transfer/dispatch completion as an Event: poll = XLA buffer readiness,
+    untimed wait = block_until_ready (no poll loop on the blocking path)."""
+    leaves = jax.tree_util.tree_leaves(value)
+    event = Event(name=name)
+    event.set_poll(
+        lambda: all(getattr(leaf, "is_ready", lambda: True)() for leaf in leaves)
+    )
+    event.set_waiter(lambda: jax.block_until_ready(value))
+    return event
+
+
 class JaxCommunicationManager(CommunicationManager):
-    """L2L device-to-device copies; async (XLA dispatch), fenced by
-    block_until_ready."""
+    """L2L device-to-device copies; async (XLA dispatch). The transfer Event
+    polls buffer readiness and blocks via block_until_ready; fence() is the
+    base-class wait over the tag's event set."""
 
     backend_name = "jaxdev"
 
-    def __init__(self):
-        self._pending: dict[int, list] = {}
-
-    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size, tag: int = 0):
+    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size):
         if direction != MemcpyDirection.LOCAL_TO_LOCAL:
             raise InvalidMemcpyDirectionError(
                 "jaxdev communication is intra-instance; use spmd/localsim for global"
@@ -158,11 +169,7 @@ class JaxCommunicationManager(CommunicationManager):
         # Functional update: rebind the destination slot's handle.
         region = jax.lax.dynamic_slice(src_arr, (src.offset + src_off,), (size,))
         dst.handle = jax.lax.dynamic_update_slice(dst.handle, region, (dst.offset + dst_off,))
-        self._pending.setdefault(tag, []).append(dst.handle)
-
-    def fence(self, tag: int = 0) -> None:
-        for arr in self._pending.pop(tag, []):
-            jax.block_until_ready(arr)
+        return _dispatch_event(dst.handle, name="jaxdev-memcpy")
 
     def exchange_global_memory_slots(self, tag, local_slots):
         from repro.core.definitions import UnsupportedOperationError
@@ -194,7 +201,7 @@ class JaxComputeManager(ComputeManager):
         pu.context = next(d for d in jax.local_devices() if d.id == jid)
         pu.status = ProcessingUnitStatus.READY
 
-    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> Future:
         pu.check_ready()
         if state.is_finished():
             raise LifetimeError("finished execution states cannot be re-used")
@@ -208,6 +215,12 @@ class JaxComputeManager(ComputeManager):
         except BaseException as e:  # noqa: BLE001
             state.mark_finished(error=e)
             pu.status = ProcessingUnitStatus.READY
+            return state.future
+        # Completion is discovered, not signalled: poll XLA readiness, and
+        # resolve through the blocking path on an untimed wait.
+        state.future.set_poll(lambda: self.is_finished(state))
+        state.future.set_waiter(lambda: self._resolve(state))
+        return state.future
 
     def is_finished(self, state: ExecutionState) -> bool:
         """Non-blocking completion query (paper §3.1.5)."""
@@ -219,15 +232,15 @@ class JaxComputeManager(ComputeManager):
             return True
         return False
 
-    def await_(self, pu: ProcessingUnit) -> None:
-        state = pu.current_state
-        if state is not None and not state.is_finished():
-            try:
-                jax.block_until_ready(state.continuation)
-                state.mark_finished(result=state.continuation)
-            except BaseException as e:  # noqa: BLE001
-                state.mark_finished(error=e)
-        pu.status = ProcessingUnitStatus.READY
+    def _resolve(self, state: ExecutionState) -> None:
+        """Blocking completion: force the dispatch, then resolve the state."""
+        if state.is_finished():
+            return
+        try:
+            jax.block_until_ready(state.continuation)
+            state.mark_finished(result=state.continuation)
+        except BaseException as e:  # noqa: BLE001
+            state.mark_finished(error=e)
 
     def finalize(self, pu: ProcessingUnit) -> None:
         pu.status = ProcessingUnitStatus.TERMINATED

@@ -28,10 +28,12 @@ import numpy as np
 
 from repro.core.definitions import (
     HiCRError,
+    InstanceFailedError,
     InvalidMemcpyDirectionError,
     MemcpyDirection,
     UnsupportedOperationError,
 )
+from repro.core.events import Event
 from repro.core.managers import (
     CommunicationManager,
     InstanceManager,
@@ -118,7 +120,7 @@ class Fabric:
                 event.set()
                 continue
             if kind in ("put", "get"):
-                (_, tag, key, local_slot, local_off, remote_off, size, origin) = op
+                (_, tag, key, local_slot, local_off, remote_off, size, origin, event) = op
                 if self.mode == "rendezvous":
                     owner = self._slots[(tag, key)][0]
                     if owner != origin:
@@ -144,7 +146,7 @@ class Fabric:
                 with self._slot_lock:
                     owner, remote_view, remote_size = self._slots[(tag, key)]
                     if remote_off + size > remote_size:
-                        self._complete(origin, tag, error=True)
+                        self._complete(origin, tag, event, error=True)
                         continue
                     lview = local_slot.handle.view(np.uint8).reshape(-1)
                     lo = local_slot.offset + local_off
@@ -152,20 +154,23 @@ class Fabric:
                         remote_view[remote_off : remote_off + size] = lview[lo : lo + size]
                     else:
                         lview[lo : lo + size] = remote_view[remote_off : remote_off + size]
-                self._complete(origin, tag)
+                self._complete(origin, tag, event)
 
-    def _complete(self, rank: int, tag: int, error: bool = False):
+    def _complete(self, rank: int, tag: int, event: "Event", error: bool = False):
         with self._pending_cv:
             self._pending[(rank, tag)] -= 1
             self._pending_cv.notify_all()
+        event.set()  # the NIC thread signals the transfer's completion object
 
     # -- one-sided operations --------------------------------------------------
-    def enqueue(self, kind: str, origin: int, tag: int, key: int, local_slot, local_off, remote_off, size):
+    def enqueue(self, kind: str, origin: int, tag: int, key: int, local_slot, local_off, remote_off, size) -> "Event":
         if (tag, key) not in self._slots:
             raise HiCRError(f"no global slot registered for (tag={tag}, key={key})")
         with self._pending_cv:
             self._pending[(origin, tag)] = self._pending.get((origin, tag), 0) + 1
-        self._nics[origin].put((kind, tag, key, local_slot, local_off, remote_off, size, origin))
+        event = Event(name=f"fabric-{kind}-t{tag}k{key}")
+        self._nics[origin].put((kind, tag, key, local_slot, local_off, remote_off, size, origin, event))
+        return event
 
     def fence(self, rank: int, tag: int):
         with self._pending_cv:
@@ -262,17 +267,14 @@ class LocalSimCommunicationManager(CommunicationManager):
             dview[dst.offset + dst_off : dst.offset + dst_off + size] = sview[
                 src.offset + src_off : src.offset + src_off + size
             ]
-        elif direction == MemcpyDirection.LOCAL_TO_GLOBAL:
+            return None  # synchronous host copy
+        if direction == MemcpyDirection.LOCAL_TO_GLOBAL:
             # one-sided PUT into (possibly remote) global slot
-            self.fabric.enqueue("put", self.rank, dst.tag, dst.key, src, src_off, dst_off, size)
-        elif direction == MemcpyDirection.GLOBAL_TO_LOCAL:
+            return self.fabric.enqueue("put", self.rank, dst.tag, dst.key, src, src_off, dst_off, size)
+        if direction == MemcpyDirection.GLOBAL_TO_LOCAL:
             # one-sided GET from (possibly remote) global slot
-            self.fabric.enqueue("get", self.rank, src.tag, src.key, dst, dst_off, src_off, size)
-        else:  # pragma: no cover - classify() already rejects G2G
-            raise InvalidMemcpyDirectionError(str(direction))
-
-    def fence(self, tag: int = 0) -> None:
-        self.fabric.fence(self.rank, tag)
+            return self.fabric.enqueue("get", self.rank, src.tag, src.key, dst, dst_off, src_off, size)
+        raise InvalidMemcpyDirectionError(str(direction))  # pragma: no cover
 
     def exchange_global_memory_slots(self, tag, local_slots):
         merged = self.fabric.exchange(self.rank, tag, local_slots)
@@ -404,7 +406,7 @@ class LocalSimWorld:
                 raise TimeoutError(f"instance thread {t.name} did not finish in {timeout}s")
         if self._errors:
             rank, err = sorted(self._errors.items())[0]
-            raise RuntimeError(f"instance {rank} failed: {err!r}") from err
+            raise InstanceFailedError(f"instance {rank} failed: {err!r}") from err
         return dict(self._results)
 
     # -- elastic instance creation (paper §3.1.1 / Fig. 7) ---------------------
@@ -440,7 +442,7 @@ class LocalSimWorld:
             t.join(timeout=timeout)
         if self._errors:
             rank, err = sorted(self._errors.items())[0]
-            raise RuntimeError(f"instance {rank} failed: {err!r}") from err
+            raise InstanceFailedError(f"instance {rank} failed: {err!r}") from err
         return dict(self._results)
 
     def shutdown(self):

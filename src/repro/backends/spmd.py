@@ -31,11 +31,14 @@ from repro.core.definitions import (
     MemcpyDirection,
     ProcessingUnitStatus,
 )
+from repro.core.events import Future
 from repro.core.managers import (
     CommunicationManager,
     ComputeManager,
     InstanceManager,
 )
+
+from .jaxdev import _dispatch_event
 from repro.core.stateful import ExecutionState, Instance, ProcessingUnit
 from repro.core.stateless import ComputeResource, ExecutionUnit
 
@@ -70,18 +73,16 @@ class SpmdInstanceManager(InstanceManager):
 class SpmdCommunicationManager(CommunicationManager):
     backend_name = "spmd"
 
-    def __init__(self):
-        self._pending: dict[int, list] = {}
-
     # -- host level -----------------------------------------------------------
     def reshard(self, array: jax.Array, sharding: jax.sharding.Sharding, *, tag: int = 0) -> jax.Array:
         """The L2G/G2L analog at runtime level: move data between layouts.
-        Asynchronous; fence(tag) to drain."""
+        Asynchronous; fence(tag) to drain (the transfer joins `tag`'s event
+        set exactly like a memcpy)."""
         out = jax.device_put(array, sharding)
-        self._pending.setdefault(tag, []).append(out)
+        self._record_transfer(tag, _dispatch_event(out, name="spmd-reshard"))
         return out
 
-    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size, tag: int = 0):
+    def _memcpy_impl(self, direction, dst, dst_off, src, src_off, size):
         if direction != MemcpyDirection.LOCAL_TO_LOCAL:
             raise InvalidMemcpyDirectionError(
                 "spmd memcpy between instances is expressed as resharding "
@@ -90,11 +91,7 @@ class SpmdCommunicationManager(CommunicationManager):
         src_arr = src.handle
         region = jax.lax.dynamic_slice(src_arr, (src.offset + src_off,), (size,))
         dst.handle = jax.lax.dynamic_update_slice(dst.handle, region, (dst.offset + dst_off,))
-        self._pending.setdefault(tag, []).append(dst.handle)
-
-    def fence(self, tag: int = 0) -> None:
-        for arr in self._pending.pop(tag, []):
-            jax.block_until_ready(arr)
+        return _dispatch_event(dst.handle, name="spmd-memcpy")
 
     def exchange_global_memory_slots(self, tag, local_slots):
         from repro.core.definitions import UnsupportedOperationError
@@ -179,7 +176,7 @@ class SpmdComputeManager(ComputeManager):
         pu.context = self.mesh
         pu.status = ProcessingUnitStatus.READY
 
-    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> Future:
         pu.check_ready()
         state.mark_executing()
         pu.current_state = state
@@ -193,16 +190,28 @@ class SpmdComputeManager(ComputeManager):
         except BaseException as e:  # noqa: BLE001
             state.mark_finished(error=e)
             pu.status = ProcessingUnitStatus.READY
+            return state.future
+        state.future.set_poll(lambda: self._poll_finished(state))
+        state.future.set_waiter(lambda: self._resolve(state))
+        return state.future
 
-    def await_(self, pu: ProcessingUnit) -> None:
-        state = pu.current_state
-        if state is not None and not state.is_finished():
-            try:
-                jax.block_until_ready(state.continuation)
-                state.mark_finished(result=state.continuation)
-            except BaseException as e:  # noqa: BLE001
-                state.mark_finished(error=e)
-        pu.status = ProcessingUnitStatus.READY
+    def _poll_finished(self, state: ExecutionState) -> bool:
+        if state.is_finished():
+            return True
+        leaves = jax.tree_util.tree_leaves(state.continuation)
+        if all(getattr(leaf, "is_ready", lambda: True)() for leaf in leaves):
+            state.mark_finished(result=state.continuation)
+            return True
+        return False
+
+    def _resolve(self, state: ExecutionState) -> None:
+        if state.is_finished():
+            return
+        try:
+            jax.block_until_ready(state.continuation)
+            state.mark_finished(result=state.continuation)
+        except BaseException as e:  # noqa: BLE001
+            state.mark_finished(error=e)
 
     def finalize(self, pu: ProcessingUnit) -> None:
         pu.status = ProcessingUnitStatus.TERMINATED

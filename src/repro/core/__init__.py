@@ -2,14 +2,27 @@
 # Support Layer between applications/runtime-systems and system technologies.
 from .definitions import (
     ExecutionStateStatus,
+    FutureTimeoutError,
     HiCRError,
+    InstanceFailedError,
     InstanceStatus,
     InvalidMemcpyDirectionError,
     LifetimeError,
     MemcpyDirection,
     MemorySpaceMismatchError,
+    NoRootInstanceError,
     ProcessingUnitStatus,
+    RemoteCallError,
     UnsupportedOperationError,
+)
+from .events import (
+    Event,
+    Future,
+    completed_event,
+    completed_future,
+    failed_future,
+    wait_all,
+    wait_any,
 )
 from .managers import (
     CommunicationManager,
@@ -45,13 +58,16 @@ from .stateless import (
 
 __all__ = [
     "CommunicationManager", "ComputeManager", "ComputeResource", "Device",
-    "ExecutionState", "ExecutionStateStatus", "ExecutionUnit",
-    "GlobalMemorySlot", "HiCRError", "Instance", "InstanceManager",
-    "InstanceStatus", "InstanceTemplate", "InvalidMemcpyDirectionError",
-    "LifetimeError", "LocalMemorySlot", "ManagerSet", "MemcpyDirection",
-    "MemoryManager", "MemorySpace", "MemorySpaceMismatchError",
-    "ProcessingUnit", "ProcessingUnitStatus", "Runtime",
+    "Event", "ExecutionState", "ExecutionStateStatus", "ExecutionUnit",
+    "Future", "FutureTimeoutError", "GlobalMemorySlot", "HiCRError",
+    "Instance", "InstanceFailedError", "InstanceManager", "InstanceStatus",
+    "InstanceTemplate", "InvalidMemcpyDirectionError", "LifetimeError",
+    "LocalMemorySlot", "ManagerSet", "MemcpyDirection", "MemoryManager",
+    "MemorySpace", "MemorySpaceMismatchError", "NoRootInstanceError",
+    "ProcessingUnit", "ProcessingUnitStatus", "RemoteCallError", "Runtime",
     "RuntimeAssemblyError", "Topology", "TopologyManager",
     "UnsupportedOperationError", "available_backends", "build",
-    "capability_table", "get_backend", "register_backend",
+    "capability_table", "completed_event", "completed_future",
+    "failed_future", "get_backend", "register_backend", "wait_all",
+    "wait_any",
 ]

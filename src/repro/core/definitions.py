@@ -39,6 +39,24 @@ class LifetimeError(HiCRError):
     """A stateful component was used outside its legal lifecycle."""
 
 
+class FutureTimeoutError(HiCRError, TimeoutError):
+    """A completion object (Event/Future) did not complete within the
+    requested timeout. Also a TimeoutError so pre-Future callers that catch
+    the builtin keep working."""
+
+
+class NoRootInstanceError(HiCRError):
+    """No launched instance is designated root (paper §3.1.1 tie-breaking)."""
+
+
+class RemoteCallError(HiCRError):
+    """An RPC executed on the remote instance raised; carries its repr."""
+
+
+class InstanceFailedError(HiCRError):
+    """An instance's entry function raised instead of returning."""
+
+
 class ExecutionStateStatus(enum.Enum):
     """Lifecycle of an ExecutionState (paper §3.1.5)."""
 

@@ -11,13 +11,17 @@ references and thus remains agnostic to the specific backend choice.
 from __future__ import annotations
 
 import abc
+import threading
 from typing import Any, Callable, Mapping, Optional, Sequence
 
 from .definitions import (
     InvalidMemcpyDirectionError,
     MemcpyDirection,
+    NoRootInstanceError,
+    ProcessingUnitStatus,
     UnsupportedOperationError,
 )
+from .events import Event, Future, completed_event
 from .stateful import (
     ExecutionState,
     GlobalMemorySlot,
@@ -87,7 +91,14 @@ class MemoryManager(abc.ABC):
 
 class CommunicationManager(abc.ABC):
     """Mediates all communication via memcpy/fence and creates/exchanges
-    global memory slots (paper §3.1.4)."""
+    global memory slots (paper §3.1.4).
+
+    `memcpy` returns a transfer `Event`; `fence(tag)` is implemented here,
+    once, on top of per-tag event sets — a backend only produces one Event
+    per transfer (or None for synchronous copies) and the bookkeeping is
+    shared. Backends with their own completion machinery may still override
+    `fence`, but none of the built-ins need to.
+    """
 
     backend_name: str = "abstract"
 
@@ -109,11 +120,17 @@ class CommunicationManager(abc.ABC):
             return MemcpyDirection.LOCAL_TO_GLOBAL
         return MemcpyDirection.GLOBAL_TO_LOCAL
 
-    def memcpy(self, dst, dst_offset: int, src, src_offset: int, size_bytes: int) -> None:
+    def memcpy(self, dst, dst_offset: int, src, src_offset: int, size_bytes: int) -> Event:
         """Initiate a (possibly asynchronous) data transfer. Completion is
-        NOT guaranteed when the call returns — use fence()."""
+        NOT guaranteed when the call returns — wait on the returned Event,
+        or fence() the transfer's tag (global-slot transfers belong to the
+        slot's exchange tag; local-to-local transfers belong to tag 0)."""
         direction = self.classify(src, dst)
-        self._memcpy_impl(direction, dst, dst_offset, src, src_offset, size_bytes)
+        event = self._memcpy_impl(direction, dst, dst_offset, src, src_offset, size_bytes)
+        if event is None:  # synchronous backend: completion is immediate
+            event = completed_event(name="memcpy")
+        self._record_transfer(self._transfer_tag(dst, src), event)
+        return event
 
     @abc.abstractmethod
     def _memcpy_impl(
@@ -124,13 +141,54 @@ class CommunicationManager(abc.ABC):
         src,
         src_offset: int,
         size_bytes: int,
-    ) -> None:
-        ...
+    ) -> Optional[Event]:
+        """Perform/enqueue the transfer; return its completion Event, or
+        None when the copy completed synchronously."""
 
-    @abc.abstractmethod
+    @staticmethod
+    def _transfer_tag(dst, src) -> int:
+        if isinstance(dst, GlobalMemorySlot):
+            return dst.tag
+        if isinstance(src, GlobalMemorySlot):
+            return src.tag
+        return 0
+
+    def _record_transfer(self, tag: int, event: Event) -> None:
+        """Track `event` in `tag`'s pending set (pruning settled entries so
+        an unfenced tag cannot grow without bound)."""
+        if "_transfer_lock" not in self.__dict__:
+            # lazily created: backends are not required to call our __init__
+            self.__dict__.setdefault("_transfer_lock", threading.Lock())
+            self.__dict__.setdefault("_transfer_events", {})
+        with self._transfer_lock:
+            pending = self._transfer_events.setdefault(tag, [])
+            if len(pending) > 64:
+                # done() rather than the raw flag: poll-backed transfer
+                # events (XLA readiness) only resolve when asked
+                pending[:] = [e for e in pending if not e.done()]
+            pending.append(event)
+
     def fence(self, tag: int = 0) -> None:
         """Suspend execution until the expected incoming and outgoing
-        transfers have completed."""
+        transfers of `tag` have completed (paper §3.1.4). Implemented on the
+        per-tag set of transfer Events this manager recorded.
+
+        Waits a *snapshot* of the tag's pending set rather than popping it:
+        with several threads fencing one manager, each fence must wait its
+        own thread's transfers even when another fence is in flight (the
+        counter-based implementations this replaces guaranteed that)."""
+        if "_transfer_lock" not in self.__dict__:
+            return  # no transfer ever recorded
+        with self._transfer_lock:
+            events = list(self._transfer_events.get(tag, ()))
+        for event in events:
+            event.wait()
+        with self._transfer_lock:
+            pending = self._transfer_events.get(tag)
+            if pending is not None:
+                pending[:] = [e for e in pending if e not in events]
+                if not pending:
+                    del self._transfer_events[tag]
 
     # -- global memory slots --------------------------------------------------
     @abc.abstractmethod
@@ -176,8 +234,10 @@ class ComputeManager(abc.ABC):
         ...
 
     @abc.abstractmethod
-    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> None:
-        """Assign `state` to `pu` and start computing it asynchronously."""
+    def execute(self, pu: ProcessingUnit, state: ExecutionState) -> Future:
+        """Assign `state` to `pu`, start computing it asynchronously, and
+        return the state's completion Future (`state.future`): `result()`
+        yields the execution unit's return value or re-raises its error."""
 
     def suspend(self, pu: ProcessingUnit) -> None:
         raise UnsupportedOperationError(f"{type(self).__name__} does not support suspension")
@@ -185,9 +245,16 @@ class ComputeManager(abc.ABC):
     def resume(self, pu: ProcessingUnit) -> None:
         raise UnsupportedOperationError(f"{type(self).__name__} does not support suspension")
 
-    @abc.abstractmethod
     def await_(self, pu: ProcessingUnit) -> None:
-        """Block until the processing unit's current execution state finishes."""
+        """Block until the processing unit's current execution state finishes.
+
+        .. deprecated:: use the Future returned by `execute()` instead; this
+           is a thin shim kept for pre-Future callers.
+        """
+        state = pu.current_state
+        if state is not None:
+            state.future.wait()
+        pu.status = ProcessingUnitStatus.READY
 
     @abc.abstractmethod
     def finalize(self, pu: ProcessingUnit) -> None:
@@ -220,7 +287,7 @@ class InstanceManager(abc.ABC):
         for inst in self.get_instances():
             if inst.is_root():
                 return inst
-        raise RuntimeError("no root instance found")
+        raise NoRootInstanceError("no root instance found")
 
     def create_instance_template(self, **requirements) -> InstanceTemplate:
         return InstanceTemplate(**requirements)

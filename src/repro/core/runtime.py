@@ -8,15 +8,22 @@ no application-level import of concrete backend modules, so the serving and
 launch layers stay backend-agnostic.
 
 A Runtime also owns a default processing unit (first compute resource of the
-queried topology) and offers a synchronous ``run()`` helper that walks the
-full HiCR execution lifecycle (create state -> execute -> await -> result).
+queried topology) and offers the execution entry points of the unified
+completion API: ``submit()`` dispatches an execution unit and returns its
+`Future`; ``drive()`` is an event-driven loop multiplexing in-flight
+completion objects (compute futures, transfer events, channel ops);
+``run()`` is the synchronous shim (``submit(...).result()``). A Runtime is
+a context manager — ``with Runtime(...) as rt:`` finalizes the default
+processing unit on exit, so worker threads are never leaked.
 """
 from __future__ import annotations
 
-from typing import Mapping, Optional, Sequence
+import time
+from typing import Callable, Iterable, Mapping, Optional, Sequence
 
 from . import registry
 from .definitions import HiCRError
+from .events import Event, Future
 from .managers import ManagerSet
 from .stateful import ProcessingUnit
 from .stateless import ExecutionUnit, Topology
@@ -78,6 +85,7 @@ class Runtime:
         )
         self._pu: Optional[ProcessingUnit] = None
         self._topology: Optional[Topology] = None
+        self._inflight: list[Future] = []
 
     # -- manager access -----------------------------------------------------
     @property
@@ -124,15 +132,76 @@ class Runtime:
     def create_execution_unit(self, fn, *, name: str = "anonymous", **kwargs) -> ExecutionUnit:
         return self.compute_manager.create_execution_unit(fn, name=name, **kwargs)
 
-    def run(self, unit: ExecutionUnit, *args, **kwargs):
-        """Synchronous execution: state -> execute -> await -> result."""
+    def submit(self, unit: ExecutionUnit, *args, **kwargs) -> Future:
+        """Asynchronous execution: create a state for `unit`, dispatch it on
+        the default processing unit, and return its completion Future. The
+        future is also tracked for `drive()`."""
         cm = self.compute_manager
         state = cm.create_execution_state(unit, *args, **kwargs)
-        cm.execute(self.processing_unit, state)
-        cm.await_(self.processing_unit)
-        return state.get_result()
+        future = cm.execute(self.processing_unit, state)
+        if len(self._inflight) > 64:
+            self._prune_inflight()
+        self._inflight.append(future)
+        return future
+
+    def _prune_inflight(self) -> None:
+        """Drop settled futures by removal, never by rebinding the list — a
+        done() call may fire a completion callback that submit()s more work
+        onto the same list, and a rebind/slice-assign would drop it."""
+        for future in [f for f in self._inflight if f.done()]:
+            try:
+                self._inflight.remove(future)
+            except ValueError:  # pragma: no cover - already removed
+                pass
+
+    def run(self, unit: ExecutionUnit, *args, **kwargs):
+        """Synchronous shim over `submit`: dispatch, block, return/raise."""
+        return self.submit(unit, *args, **kwargs).result()
+
+    def drive(
+        self,
+        events: Optional[Iterable[Event]] = None,
+        *,
+        until: Optional[Callable[[], bool]] = None,
+        timeout: Optional[float] = None,
+    ) -> bool:
+        """Event-driven completion loop: repeatedly poll the given completion
+        objects (default: every future submitted through this Runtime),
+        firing their callbacks as they complete, until all are done — or
+        `until()` turns true — or `timeout` elapses (returns False then).
+
+        This is the multiplexing point the blocking API lacks: one loop can
+        overlap compute futures, transfer events, channel pops, and RPC
+        replies without prescribing an order of completion.
+        """
+        explicit = None if events is None else list(events)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if explicit is None:
+                # prune the live list every pass: a completion callback may
+                # submit() follow-up work mid-drive, and it must be driven too
+                self._prune_inflight()
+                pending = self._inflight
+            else:
+                explicit = [e for e in explicit if not e.done()]
+                pending = explicit
+            if until is not None:
+                if until():
+                    return True
+            elif not pending:
+                return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            time.sleep(0)
 
     def finalize(self) -> None:
         if self._pu is not None:
             self.compute_manager.finalize(self._pu)
             self._pu = None
+
+    # -- context management: never leak the default PU -----------------------
+    def __enter__(self) -> "Runtime":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.finalize()

@@ -6,7 +6,6 @@ They are unique and therefore cannot be replicated.
 """
 from __future__ import annotations
 
-import threading
 from typing import Any, Mapping, Optional
 
 from .definitions import (
@@ -16,6 +15,7 @@ from .definitions import (
     ProcessingUnitStatus,
     fresh_id,
 )
+from .events import Future
 from .stateless import ComputeResource, ExecutionUnit, MemorySpace, Topology
 
 
@@ -109,7 +109,9 @@ class ExecutionState:
         self.status = ExecutionStateStatus.CREATED
         self.result: Any = None
         self.error: Optional[BaseException] = None
-        self._done = threading.Event()
+        #: The completion object for this execution: resolved by
+        #: mark_finished(); what ComputeManager.execute() hands back.
+        self.future = Future(name=f"exec:{execution_unit.name}:{self.state_id}")
         #: Backend-specific continuation (thread handle, generator, future...).
         self.continuation: Any = None
 
@@ -128,14 +130,17 @@ class ExecutionState:
         self.status = ExecutionStateStatus.FINISHED
         self.result = result
         self.error = error
-        self._done.set()
+        if error is not None:
+            self.future.set_exception(error)
+        else:
+            self.future.set_result(result)
 
     # -- completion queries: blocking or non-blocking (paper §3.1.5) --------
     def is_finished(self) -> bool:
         return self.status == ExecutionStateStatus.FINISHED
 
     def wait(self, timeout: float | None = None) -> bool:
-        return self._done.wait(timeout)
+        return self.future.wait(timeout)
 
     def get_result(self):
         if not self.is_finished():

@@ -22,11 +22,57 @@ tail counter, the consumer owns the head counter.
 from __future__ import annotations
 
 import struct
-import time
+from collections import deque
 from typing import Optional, Sequence
 
 from repro.core.definitions import HiCRError
+from repro.core.events import Event, Future
 from repro.core.managers import CommunicationManager, MemoryManager
+
+
+def _push_event(channel, queue: "deque", data: bytes) -> Event:
+    """Completion object for an asynchronous push: one eager nonblocking
+    attempt now, then each poll retries until ring space frees up.
+
+    FIFO is preserved regardless of poll order: pending pushes of one
+    producer live in `queue` (submission order) and every event's poll
+    drains *earlier* entries before its own, so a later push can never
+    jump a still-pending earlier one into the ring."""
+    ev = Event(name="channel-push")
+    entry = (data, ev)
+    queue.append(entry)
+
+    def poll() -> bool:
+        while queue[0] is not entry:
+            head_data, head_ev = queue[0]
+            if not channel.try_push(head_data):
+                return False
+            queue.popleft()
+            head_ev.set()
+        if channel.try_push(data):
+            queue.popleft()
+            return True
+        return False
+
+    ev.set_poll(poll)
+    ev.done()  # eager attempt: an uncontended push completes here
+    return ev
+
+
+def pop_future(channel) -> Future:
+    """Completion object for an asynchronous pop: polls the ring and resolves
+    with the popped message bytes."""
+    fut = Future(name="channel-pop")
+
+    def poll() -> bool:
+        data = channel.try_pop()
+        if data is None:
+            return False
+        fut.set_result(data)
+        return True
+
+    fut.set_poll(poll)
+    return fut
 
 
 class ChannelMessageTooLargeError(HiCRError):
@@ -78,6 +124,8 @@ class SPSCProducer(_EndBase):
         self._head_slot = gslots[KEY_HEAD + key_offset]
         self._tail = 0
         self._cached_head = 0
+        #: submission-ordered pending async pushes (see _push_event)
+        self._push_queue: deque = deque()
 
     def _full(self) -> bool:
         if self._tail - self._cached_head < self.capacity:
@@ -110,12 +158,17 @@ class SPSCProducer(_EndBase):
         _write_counter(self.comm, self._scratch, self._tail_slot, self._tail)
         return True
 
+    def push_async(self, data: bytes) -> Event:
+        """Nonblocking push returning its completion Event (completes once
+        ring space frees up and the message lands). Outstanding pushes of
+        one producer land in submission order."""
+        self._check_size(data)
+        return _push_event(self, self._push_queue, data)
+
     def push(self, data: bytes, *, timeout: float = 30.0) -> None:
-        deadline = time.monotonic() + timeout
-        while not self.try_push(data):
-            if time.monotonic() > deadline:
-                raise TimeoutError("channel full")
-            time.sleep(0)
+        """Blocking shim over `push_async`."""
+        if not self.push_async(data).wait(timeout):
+            raise TimeoutError("channel full")
 
 
 class SPSCConsumer(_EndBase):
@@ -152,15 +205,16 @@ class SPSCConsumer(_EndBase):
         _write_counter(self.comm, self._scratch, self._head_slot, self._head)
         return data
 
+    def pop_async(self) -> Future:
+        """Nonblocking pop returning a Future resolving to message bytes."""
+        return pop_future(self)
+
     def pop(self, *, timeout: float = 30.0) -> bytes:
-        deadline = time.monotonic() + timeout
-        while True:
-            data = self.try_pop()
-            if data is not None:
-                return data
-            if time.monotonic() > deadline:
-                raise TimeoutError("channel empty")
-            time.sleep(0)
+        """Blocking shim over `pop_async`."""
+        fut = self.pop_async()
+        if not fut.wait(timeout):
+            raise TimeoutError("channel empty")
+        return fut.result()
 
 
 # ---------------------------------------------------------------------------
@@ -258,12 +312,13 @@ class MPSCNonLockingConsumer:
                 return data
         return None
 
+    def pop_async(self) -> Future:
+        """Nonblocking pop returning a Future resolving to message bytes."""
+        return pop_future(self)
+
     def pop(self, *, timeout: float = 30.0) -> bytes:
-        deadline = time.monotonic() + timeout
-        while True:
-            data = self.try_pop()
-            if data is not None:
-                return data
-            if time.monotonic() > deadline:
-                raise TimeoutError("channel empty")
-            time.sleep(0)
+        """Blocking shim over `pop_async`."""
+        fut = self.pop_async()
+        if not fut.wait(timeout):
+            raise TimeoutError("channel empty")
+        return fut.result()

@@ -16,6 +16,8 @@ import json
 import threading
 from typing import Any, Callable, Dict, Optional
 
+from repro.core.definitions import RemoteCallError
+from repro.core.events import Future
 from repro.core.managers import InstanceManager
 from repro.core.stateful import Instance
 
@@ -37,7 +39,12 @@ class RPCEngine:
         self._functions[name] = fn
 
     # -- caller side --------------------------------------------------------------
-    def call(self, target: Instance, name: str, *args, timeout: float = 30.0, **kwargs) -> Any:
+    def call_async(self, target: Instance, name: str, *args, **kwargs) -> Future:
+        """Launch an RPC and return its reply Future: `result()` yields the
+        remote return value, or raises `RemoteCallError` with the remote
+        error's repr. Completion is discovered by draining this engine's
+        message path, so several in-flight calls multiplex on one receiver
+        (combine with `wait_any`/`wait_all`)."""
         with _call_lock:
             call_id = f"{self._me}:{next(_call_counter)}"
         req = {
@@ -49,12 +56,31 @@ class RPCEngine:
             "reply_to": self._me,
         }
         self.im.send_message(target, json.dumps(req).encode())
-        reply = self._wait_for(lambda m: m.get("kind") == "rpc-rep" and m.get("id") == call_id, timeout)
-        if reply is None:
+        fut = Future(name=f"rpc:{name}->{target.instance_id}")
+
+        def poll() -> bool:
+            reply = self._poll_for(
+                lambda m: m.get("kind") == "rpc-rep" and m.get("id") == call_id
+            )
+            if reply is None:
+                return False
+            if reply.get("error"):
+                fut.set_exception(
+                    RemoteCallError(f"remote RPC {name} failed: {reply['error']}")
+                )
+            else:
+                fut.set_result(reply.get("result"))
+            return True
+
+        fut.set_poll(poll)
+        return fut
+
+    def call(self, target: Instance, name: str, *args, timeout: float = 30.0, **kwargs) -> Any:
+        """Blocking shim over `call_async`."""
+        fut = self.call_async(target, name, *args, **kwargs)
+        if not fut.wait(timeout):
             raise TimeoutError(f"RPC {name} to {target.instance_id} timed out")
-        if reply.get("error"):
-            raise RuntimeError(f"remote RPC {name} failed: {reply['error']}")
-        return reply.get("result")
+        return fut.result()
 
     def notify(self, target: Instance, name: str, *args, **kwargs) -> None:
         """Fire-and-forget variant (no return value routing)."""
@@ -106,22 +132,30 @@ class RPCEngine:
                 return inst
         raise LookupError(instance_id)
 
-    def _wait_for(self, predicate, timeout: float) -> Optional[dict]:
-        import time
-
-        deadline = time.monotonic() + timeout
-        # serve from buffer first
+    def _poll_for(self, predicate) -> Optional[dict]:
+        """Nonblocking scan: buffered messages first, then drain whatever the
+        message path already holds. Returns None when no match is available
+        right now (unmatched messages stay buffered for other waiters)."""
         for i, m in enumerate(self._buffered):
             if predicate(m):
                 return self._buffered.pop(i)
         while True:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                return None
-            blob = self.im.recv_message(timeout=min(remaining, 0.1))
+            blob = self.im.recv_message(timeout=0.001)
             if blob is None:
-                continue
+                return None
             msg = json.loads(blob.decode())
             if predicate(msg):
                 return msg
             self._buffered.append(msg)
+
+    def _wait_for(self, predicate, timeout: float) -> Optional[dict]:
+        import time
+
+        deadline = time.monotonic() + timeout
+        while True:
+            msg = self._poll_for(predicate)
+            if msg is not None:
+                return msg
+            if time.monotonic() >= deadline:
+                return None
+            time.sleep(0)

@@ -48,7 +48,6 @@ def main(argv=None):
 
     prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
     max_len = prefix + args.prompt_len + args.steps
-    runtime = Runtime(args.backend)
     requests = synthetic_requests(
         cfg.vocab_size,
         args.requests,
@@ -58,21 +57,24 @@ def main(argv=None):
     total_tokens = sum(r.max_new_tokens for r in requests)
 
     t0 = time.time()
-    if args.mode == "serial":
-        engine = ServeEngine(model, params, max_len=max_len, runtime=runtime)
-        for r in requests:
-            prompt = np.asarray([r.prompt], dtype=np.int32)
-            result = engine.generate(prompt, steps=r.max_new_tokens)
-            print(f"{r.rid}: {result.tokens[0][:8].tolist()}...")
-    else:
-        sched = ContinuousBatchingScheduler(
-            model, params, max_batch=args.max_batch, max_len=max_len, runtime=runtime
-        )
-        results = sched.serve(requests)
-        for r in requests:
-            fin = results[r.rid]
-            print(f"{fin.rid}: {fin.tokens[:8]}... ({fin.finish_reason})")
-        print(f"scheduler: {sched.ticks} decode ticks for {len(requests)} requests")
+    # context-managed Runtime: the default processing unit is finalized on
+    # exit, so repeated invocations never leak backend worker threads
+    with Runtime(args.backend) as runtime:
+        if args.mode == "serial":
+            engine = ServeEngine(model, params, max_len=max_len, runtime=runtime)
+            for r in requests:
+                prompt = np.asarray([r.prompt], dtype=np.int32)
+                result = engine.generate(prompt, steps=r.max_new_tokens)
+                print(f"{r.rid}: {result.tokens[0][:8].tolist()}...")
+        else:
+            sched = ContinuousBatchingScheduler(
+                model, params, max_batch=args.max_batch, max_len=max_len, runtime=runtime
+            )
+            results = sched.serve(requests)
+            for r in requests:
+                fin = results[r.rid]
+                print(f"{fin.rid}: {fin.tokens[:8]}... ({fin.finish_reason})")
+            print(f"scheduler: {sched.ticks} decode ticks for {len(requests)} requests")
     dt = time.time() - t0
     print(f"served {len(requests)} requests / {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s, mode={args.mode}, backend={args.backend})")

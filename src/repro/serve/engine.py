@@ -57,12 +57,19 @@ class ServeEngine:
     def _run(self, unit, *args):
         return self.rt.run(unit, *args)
 
-    def generate(self, prompts: np.ndarray, steps: int) -> GenerationResult:
-        """prompts: (B, S) int32. Greedy decode `steps` new tokens."""
+    def generate(
+        self, prompts: np.ndarray, steps: int, *, on_first_token=None
+    ) -> GenerationResult:
+        """prompts: (B, S) int32. Greedy decode `steps` new tokens.
+        `on_first_token`, if given, is called once the first output token is
+        materialized (prefill done) — the serve benchmark's TTFT probe."""
         B, S = prompts.shape
         logits, state = self._run(self._prefill_unit, self.params, {"tokens": jnp.asarray(prompts)})
         out = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if on_first_token is not None:
+            jax.block_until_ready(tok)
+            on_first_token()
         # cache positions include any multimodal prefix (VLM vision tokens)
         pos = S + (self.model.cfg.vision_tokens if self.model.cfg.family == "vlm" else 0)
         for _ in range(steps):

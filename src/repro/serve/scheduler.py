@@ -86,6 +86,16 @@ class ContinuousBatchingScheduler:
     def active_ids(self) -> List[str]:
         return [row.request.rid for row in self._table if row is not None]
 
+    def active_progress(self) -> Dict[str, List[int]]:
+        """Tokens emitted so far per *active* request (copies). This is what
+        the streaming front door diffs against its per-request high-water
+        mark to form delta chunks."""
+        return {
+            row.request.rid: list(row.emitted)
+            for row in self._table
+            if row is not None
+        }
+
     # -- admission (any time, including mid-decode) -------------------------
     def try_admit(self, request: Request) -> bool:
         """Prefill `request` and seat it in a free slot. Returns False when

@@ -202,3 +202,46 @@ class TestRegistry:
     def test_unknown_backend(self):
         with pytest.raises(KeyError):
             get_backend("cuda")
+
+
+class TestModelErrorHierarchy:
+    """Satellite sweep: model violations raise HiCRError subclasses, so
+    callers can catch model errors uniformly (and legacy callers catching
+    RuntimeError/TimeoutError keep working)."""
+
+    def test_no_root_instance_is_model_error(self):
+        from repro.core import HiCRError, NoRootInstanceError
+        from repro.core.managers import InstanceManager
+
+        class Rootless(InstanceManager):
+            def get_instances(self):
+                return ()
+
+            def get_current_instance(self):  # pragma: no cover - unused
+                raise NotImplementedError
+
+        with pytest.raises(NoRootInstanceError):
+            Rootless().get_root_instance()
+        assert issubclass(NoRootInstanceError, HiCRError)
+
+    def test_error_hierarchy_preserves_legacy_bases(self):
+        from repro.core import (
+            FutureTimeoutError,
+            HiCRError,
+            InstanceFailedError,
+            RemoteCallError,
+        )
+
+        for err in (FutureTimeoutError, InstanceFailedError, RemoteCallError):
+            assert issubclass(err, HiCRError)
+            assert issubclass(err, RuntimeError)
+        assert issubclass(FutureTimeoutError, TimeoutError)
+
+    def test_instance_failure_raises_model_error(self):
+        from repro.backends.localsim import LocalSimWorld
+        from repro.core import InstanceFailedError
+
+        w = LocalSimWorld(1)
+        with pytest.raises(InstanceFailedError, match="instance 0 failed"):
+            w.launch(lambda mgrs, rank: 1 // 0)
+        w.shutdown()

@@ -1,0 +1,371 @@
+"""Unified async completion API: Event/Future semantics, the wait_all /
+wait_any combinators across mixed backends, completion objects returned by
+compute execute() / memcpy() / channel ops / RPC, and the Runtime
+submit()/drive() loop."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Event,
+    Future,
+    FutureTimeoutError,
+    Runtime,
+    completed_event,
+    completed_future,
+    failed_future,
+    wait_all,
+    wait_any,
+)
+from repro.core.registry import build
+
+
+class TestEvent:
+    def test_starts_pending_and_sets_once(self):
+        ev = Event(name="e")
+        assert not ev.done()
+        ev.set()
+        assert ev.done()
+        ev.set()  # idempotent
+        assert ev.done()
+
+    def test_wait_timeout_returns_false(self):
+        assert Event().wait(0.01) is False
+        assert completed_event().wait(0.01) is True
+
+    def test_callback_before_done_fires_on_set(self):
+        ev, hits = Event(), []
+        ev.add_callback(lambda e: hits.append(e))
+        assert hits == []
+        ev.set()
+        assert hits == [ev]
+
+    def test_callback_after_done_fires_immediately(self):
+        ev = completed_event()
+        hits = []
+        ev.add_callback(lambda e: hits.append(e))
+        assert hits == [ev]
+
+    def test_callbacks_fire_exactly_once(self):
+        ev, hits = Event(), []
+        ev.add_callback(lambda e: hits.append(1))
+        ev.set()
+        ev.set()
+        assert hits == [1]
+
+    def test_poll_backed_event_completes_via_done(self):
+        ready = []
+        ev = Event().set_poll(lambda: bool(ready))
+        assert not ev.done()
+        ready.append(1)
+        assert ev.done()
+
+    def test_poll_runs_at_most_until_first_success(self):
+        """A successful poll (e.g. a channel push attempt) must never run
+        again — the op would double-apply."""
+        calls = []
+
+        def poll():
+            calls.append(1)
+            return True
+
+        ev = Event().set_poll(poll)
+        assert ev.done() and ev.done() and ev.wait(1)
+        assert calls == [1]
+
+    def test_poll_hook_may_resolve_future_itself(self):
+        fut = Future()
+        fut.set_poll(lambda: (fut.set_result(42), True)[1])
+        assert fut.done()
+        assert fut.result() == 42
+
+
+class TestFuture:
+    def test_result_blocks_until_set(self):
+        fut = Future()
+        threading.Timer(0.02, lambda: fut.set_result("late")).start()
+        assert fut.result(timeout=5) == "late"
+
+    def test_result_timeout_raises(self):
+        with pytest.raises(FutureTimeoutError):
+            Future().result(timeout=0.01)
+        # FutureTimeoutError doubles as the builtin for legacy callers
+        with pytest.raises(TimeoutError):
+            Future().result(timeout=0.01)
+
+    def test_exception_propagates_through_result(self):
+        fut = failed_future(ValueError("boom"))
+        with pytest.raises(ValueError, match="boom"):
+            fut.result()
+        assert isinstance(fut.exception(), ValueError)
+
+    def test_completed_future_result(self):
+        assert completed_future(7).result() == 7
+        assert completed_future(7).exception() is None
+
+
+class TestCombinators:
+    def test_wait_all_and_timeout(self):
+        evs = [Event() for _ in range(3)]
+        for e in evs[:2]:
+            e.set()
+        assert wait_all(evs, timeout=0.02) is False
+        evs[2].set()
+        assert wait_all(evs, timeout=1) is True
+
+    def test_wait_any_returns_completed_event(self):
+        a, b = Event(name="a"), Event(name="b")
+        threading.Timer(0.02, b.set).start()
+        assert wait_any([a, b], timeout=5) is b
+
+    def test_wait_any_timeout_returns_none(self):
+        assert wait_any([Event(), Event()], timeout=0.02) is None
+
+    def test_wait_any_rejects_empty(self):
+        with pytest.raises(ValueError):
+            wait_any([])
+
+    def test_wait_any_mixed_backends(self):
+        """One signalled future (hostcpu worker thread) racing one
+        poll-backed future (jaxdev XLA dispatch): wait_any multiplexes both
+        completion styles in a single call."""
+        host_rt = Runtime("hostcpu")
+        jax_rt = Runtime("jaxdev")
+        try:
+            slow = host_rt.create_execution_unit(
+                lambda: time.sleep(0.2) or "host", name="slow-host"
+            )
+            fast = jax_rt.create_execution_unit(lambda: 2.0 + 2.0, name="jax-add")
+            host_fut = host_rt.submit(slow)
+            jax_fut = jax_rt.submit(fast)
+            first = wait_any([host_fut, jax_fut], timeout=30)
+            assert first is jax_fut  # XLA add beats a 200ms sleep
+            assert wait_all([host_fut, jax_fut], timeout=30)
+            assert host_fut.result() == "host"
+            assert float(jax_fut.result()) == 4.0
+        finally:
+            host_rt.finalize()
+            jax_rt.finalize()
+
+
+class TestManagerCompletionObjects:
+    def test_hostcpu_execute_returns_future(self):
+        with Runtime("hostcpu") as rt:
+            unit = rt.create_execution_unit(lambda x: x + 1, name="inc")
+            cm = rt.compute_manager
+            state = cm.create_execution_state(unit, 41)
+            fut = cm.execute(rt.processing_unit, state)
+            assert isinstance(fut, Future)
+            assert fut.result(timeout=10) == 42
+            assert fut is state.future
+
+    def test_jaxdev_execute_returns_future(self):
+        with Runtime("jaxdev") as rt:
+            unit = rt.create_execution_unit(lambda x: x * 2.0, name="dbl")
+            fut = rt.submit(unit, 21.0)
+            assert float(fut.result(timeout=30)) == 42.0
+
+    def test_future_exception_from_execution(self):
+        with Runtime("hostcpu") as rt:
+            bad = rt.create_execution_unit(lambda: 1 // 0, name="boom")
+            fut = rt.submit(bad)
+            with pytest.raises(ZeroDivisionError):
+                fut.result(timeout=10)
+
+    def test_memcpy_returns_event_hostcpu(self):
+        mm = build("hostcpu", "memory")
+        cmm = build("hostcpu", "communication")
+        space = mm.memory_spaces()[0]
+        src = mm.allocate_local_memory_slot(space, 32)
+        dst = mm.allocate_local_memory_slot(space, 32)
+        src.handle[:4] = np.frombuffer(b"ping", dtype=np.uint8)
+        ev = cmm.memcpy(dst, 0, src, 0, 32)
+        assert isinstance(ev, Event)
+        assert ev.wait(10)
+        assert bytes(dst.handle[:4]) == b"ping"
+        cmm.fence()  # the per-tag event set is also drained by fence
+
+    def test_memcpy_returns_event_jaxdev(self):
+        mm = build("jaxdev", "memory")
+        cmm = build("jaxdev", "communication")
+        space = mm.memory_spaces()[0]
+        src = mm.register_local_memory_slot(space, b"abcd" + bytes(28), 32)
+        dst = mm.allocate_local_memory_slot(space, 32)
+        ev = cmm.memcpy(dst, 0, src, 0, 32)
+        assert ev.wait(30)
+        assert bytes(np.asarray(dst.handle)[:4].tobytes()) == b"abcd"
+
+    def test_fence_waits_the_whole_tag_event_set(self):
+        mm = build("hostcpu", "memory")
+        cmm = build("hostcpu", "communication")
+        space = mm.memory_spaces()[0]
+        src = mm.allocate_local_memory_slot(space, 1024)
+        dsts = [mm.allocate_local_memory_slot(space, 1024) for _ in range(8)]
+        src.handle[:] = 7
+        events = [cmm.memcpy(d, 0, src, 0, 1024) for d in dsts]
+        cmm.fence()
+        assert all(e.done() for e in events)
+        assert all(bytes(d.handle[:3]) == b"\x07\x07\x07" for d in dsts)
+
+
+class TestRuntimeDrive:
+    def test_drive_until_all_submitted_complete(self):
+        with Runtime("hostcpu") as rt:
+            unit = rt.create_execution_unit(lambda x: x, name="id")
+            futs = [rt.submit(unit, i) for i in range(4)]
+            assert rt.drive(timeout=10) is True
+            assert [f.result() for f in futs] == [0, 1, 2, 3]
+
+    def test_drive_fires_callbacks_of_polled_events(self):
+        with Runtime("hostcpu") as rt:
+            order = []
+            ready = []
+            polled = Event(name="polled").set_poll(lambda: bool(ready))
+            polled.add_callback(lambda e: order.append("polled"))
+            threading.Timer(0.01, lambda: ready.append(1)).start()
+            assert rt.drive([polled], timeout=10) is True
+            assert order == ["polled"]
+
+    def test_drive_timeout(self):
+        with Runtime("hostcpu") as rt:
+            assert rt.drive([Event()], timeout=0.05) is False
+
+    def test_drive_until_predicate(self):
+        with Runtime("hostcpu") as rt:
+            hits = []
+            unit = rt.create_execution_unit(lambda: hits.append(1), name="hit")
+            rt.submit(unit)
+            assert rt.drive(until=lambda: bool(hits), timeout=10)
+
+    def test_context_manager_finalizes_default_pu(self):
+        rt = Runtime("hostcpu")
+        with rt:
+            rt.run(rt.create_execution_unit(lambda: None, name="noop"))
+            worker = rt._pu.context
+            assert worker.is_alive()
+        assert rt._pu is None
+        worker.join(timeout=5)
+        assert not worker.is_alive()
+
+
+class TestChannelAsyncOps:
+    def test_push_pop_async_over_localsim(self):
+        from repro.backends.localsim import LocalSimWorld
+        from repro.frontends.channels import SPSCConsumer, SPSCProducer
+
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:
+                prod = SPSCProducer(cm, mm, tag=5, capacity=2, msg_size=16)
+                events = [prod.push_async(f"m{i}".encode().ljust(16, b"\0"))
+                          for i in range(4)]
+                # capacity 2: the last pushes only complete as the consumer
+                # drains — wait_all is the natural barrier
+                assert wait_all(events, timeout=30)
+                return "pushed"
+            cons = SPSCConsumer(cm, mm, tag=5, capacity=2, msg_size=16)
+            got = []
+            while len(got) < 4:
+                fut = cons.pop_async()
+                assert fut.wait(30)
+                got.append(bytes(fut.result()).rstrip(b"\0").decode())
+            return got
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog, timeout=60)
+        w.shutdown()
+        assert results[1] == ["m0", "m1", "m2", "m3"]
+
+    def test_push_async_preserves_fifo_despite_poll_order(self):
+        """A later push_async must not jump a still-pending earlier one into
+        the ring — not even via its eager attempt at creation, and not when
+        its event is polled first."""
+        from repro.frontends.channels import _push_event
+        from collections import deque
+
+        class FakeRing:
+            def __init__(self, capacity):
+                self.capacity = capacity
+                self.items = []
+                self.popped = []
+
+            def try_push(self, data):
+                if len(self.items) >= self.capacity:
+                    return False
+                self.items.append(data)
+                return True
+
+            def drain_one(self):
+                self.popped.append(self.items.pop(0))
+
+        ring = FakeRing(capacity=1)
+        q: deque = deque()
+        ev_a = _push_event(ring, q, b"A")   # fills the ring
+        ev_b = _push_event(ring, q, b"B")   # pending: ring full
+        assert ev_a.done() and not ev_b.done()
+        ring.drain_one()
+        ev_c = _push_event(ring, q, b"C")   # eager attempt must NOT seat C
+        assert not ev_c.done() or ring.items != [b"C"]
+        ring.drain_one()
+        # polling C drains B first, then C — submission order end to end
+        while not ev_c.done():
+            ring.drain_one()
+        assert ev_b.done()
+        assert ring.popped + ring.items == [b"A", b"B", b"C"]
+
+    def test_pop_async_pending_until_message(self):
+        from repro.backends.localsim import LocalSimWorld
+        from repro.frontends.channels import SPSCConsumer, SPSCProducer
+
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:
+                prod = SPSCProducer(cm, mm, tag=6, capacity=2, msg_size=8)
+                time.sleep(0.05)
+                prod.push(b"late".ljust(8, b"\0"))
+                return None
+            cons = SPSCConsumer(cm, mm, tag=6, capacity=2, msg_size=8)
+            fut = cons.pop_async()
+            assert not fut.done()  # nothing sent yet
+            assert fut.wait(30)
+            return bytes(fut.result()).rstrip(b"\0").decode()
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog, timeout=60)
+        w.shutdown()
+        assert results[1] == "late"
+
+
+class TestRpcAsync:
+    def test_call_async_future_and_error(self):
+        from repro.backends.localsim import LocalSimWorld
+        from repro.core import RemoteCallError
+        from repro.frontends.rpc import RPCEngine
+
+        def prog(mgrs, rank):
+            im = mgrs.instance_manager
+            eng = RPCEngine(im)
+            if rank == 0:
+                eng.register("add", lambda a, b: a + b)
+                eng.register("bad", lambda: 1 // 0)
+                served = 0
+                while served < 3:
+                    if eng.listen(timeout=30):
+                        served += 1
+                return "served"
+            root = im.get_root_instance()
+            f1 = eng.call_async(root, "add", 1, 2)
+            f2 = eng.call_async(root, "add", 10, 20)
+            f_err = eng.call_async(root, "bad")
+            assert wait_all([f1, f2, f_err], timeout=30)
+            assert (f1.result(), f2.result()) == (3, 30)
+            with pytest.raises(RemoteCallError, match="ZeroDivision"):
+                f_err.result()
+            return "ok"
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog, timeout=60)
+        w.shutdown()
+        assert results == {0: "served", 1: "ok"}

@@ -338,6 +338,199 @@ class TestChannelServer:
         assert len(by_id["good"]["tokens"]) == 2
 
 
+class TestServeIngestDiscipline:
+    def test_full_backlog_does_not_consume_channel_messages(self, bundle):
+        """Regression: with the backlog at max_batch, the ingest loop must
+        not poll the arrival future — done() pops the ring as a side effect
+        and the message would be dropped when serve() returns."""
+        from collections import deque
+
+        class CountingConsumer:
+            def __init__(self, msgs):
+                self.msgs = deque(msgs)
+
+            def try_pop(self):
+                return self.msgs.popleft() if self.msgs else None
+
+        class FakeReply:
+            def __init__(self):
+                self.out = []
+
+            def push(self, data):
+                self.out.append(json.loads(bytes(data).rstrip(b"\0").decode()))
+
+        _, model, params = bundle
+        msgs = [
+            json.dumps({"id": f"q{i}", "prompt": [1, 2, 3], "steps": 4}
+                       ).encode().ljust(256, b"\0")
+            for i in range(3)
+        ]
+        cons = CountingConsumer(msgs)
+        sched = ContinuousBatchingScheduler(model, params, max_batch=1, max_len=32)
+        ChannelServer(sched, cons, FakeReply(), msg_size=256).serve(1)
+        # exactly one request was settled; the others must still be queued
+        assert len(cons.msgs) >= 1, "undrained requests were consumed and lost"
+
+    def test_idle_timeout_surfaces_instead_of_hanging(self, bundle):
+        """A server idle past idle_timeout with requests still awaited
+        raises a (catchable) TimeoutError rather than spinning forever."""
+        _, model, params = bundle
+
+        class EmptyConsumer:
+            def try_pop(self):
+                return None
+
+        sched = ContinuousBatchingScheduler(model, params, max_batch=1, max_len=32)
+        server = ChannelServer(sched, EmptyConsumer(), None, idle_timeout=0.05)
+        with pytest.raises(TimeoutError, match="no request arrived"):
+            server.serve(1)
+
+
+class TestStreamingReplies:
+    def test_streaming_over_localsim_fabric(self, bundle):
+        """Acceptance scenario: one client, one server over the localsim
+        fabric, a >= 16-token request served with stream_interval=4 — the
+        client observes >= 2 delta chunks BEFORE the terminal chunk, and the
+        deltas reassemble (in arrival order) to the full token list."""
+        from repro.backends.localsim import LocalSimWorld
+        from repro.frontends.channels import SPSCConsumer, SPSCProducer
+
+        _, model, params = bundle
+        MSG = 512
+        STEPS = 18
+
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:  # server
+                req_cons = SPSCConsumer(cm, mm, tag=1, capacity=4, msg_size=MSG)
+                rep_prod = SPSCProducer(cm, mm, tag=10, capacity=16, msg_size=MSG)
+
+                class Reply:
+                    def push(self, msg):
+                        rep_prod.push(msg)
+
+                sched = ContinuousBatchingScheduler(model, params, max_batch=2,
+                                                    max_len=32)
+                ChannelServer(sched, req_cons, Reply(), msg_size=MSG,
+                              stream_interval=4).serve(n_requests=1)
+                return "served"
+            # client
+            req_prod = SPSCProducer(cm, mm, tag=1, capacity=4, msg_size=MSG)
+            rep_cons = SPSCConsumer(cm, mm, tag=10, capacity=16, msg_size=MSG)
+            req = {"id": "s-0", "prompt": [1, 2, 3, 4], "steps": STEPS}
+            req_prod.push(json.dumps(req).encode().ljust(MSG, b"\0"))
+            chunks = []
+            while True:
+                chunk = json.loads(rep_cons.pop(timeout=240).rstrip(b"\0").decode())
+                chunks.append(chunk)
+                if chunk["done"]:
+                    return chunks
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog, timeout=300)
+        w.shutdown()
+        chunks = results[1]
+        assert results[0] == "served"
+        # every chunk belongs to the request; only the last is terminal
+        assert all(c["id"] == "s-0" for c in chunks)
+        assert [c["done"] for c in chunks[:-1]] == [False] * (len(chunks) - 1)
+        assert chunks[-1]["done"] is True
+        assert len(chunks) - 1 >= 2, f"want >=2 deltas before terminal: {chunks}"
+        assert chunks[-1]["finish_reason"] == "length"
+        tokens = [t for c in chunks for t in c["delta"]]
+        assert len(tokens) == STEPS
+
+    def test_stream_reassembly_matches_terse_protocol(self, bundle):
+        """Streaming is a transport change only: per-request delta
+        concatenation equals the terse protocol's token list, interleaved
+        ids notwithstanding."""
+        from collections import deque
+
+        class FakeConsumer:
+            def __init__(self, msgs):
+                self.msgs = deque(msgs)
+
+            def try_pop(self):
+                return self.msgs.popleft() if self.msgs else None
+
+        class FakeReply:
+            def __init__(self):
+                self.out = []
+
+            def push(self, data):
+                self.out.append(json.loads(bytes(data).rstrip(b"\0").decode()))
+
+        _, model, params = bundle
+        reqs = [
+            {"id": "a", "prompt": [1, 2, 3], "steps": 9},
+            {"id": "b", "prompt": [4, 5, 6, 7], "steps": 6},
+        ]
+        msgs = [json.dumps(r).encode().ljust(256, b"\0") for r in reqs]
+
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=32)
+        terse = FakeReply()
+        ChannelServer(sched, FakeConsumer(list(msgs)), terse, msg_size=256).serve(2)
+        expected = {r["id"]: r["tokens"] for r in terse.out}
+
+        sched2 = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=32)
+        streamed = FakeReply()
+        ChannelServer(sched2, FakeConsumer(list(msgs)), streamed, msg_size=256,
+                      stream_interval=2).serve(2)
+        got: dict = {}
+        finish: dict = {}
+        for chunk in streamed.out:
+            assert set(chunk) >= {"id", "delta", "done"}
+            assert chunk["id"] not in finish, "chunk after terminal chunk"
+            got.setdefault(chunk["id"], []).extend(chunk["delta"])
+            if chunk["done"]:
+                finish[chunk["id"]] = chunk["finish_reason"]
+        assert got == expected
+        assert finish == {"a": "length", "b": "length"}
+        # both requests decoded long enough to produce intermediate deltas
+        deltas_before_done = {"a": 0, "b": 0}
+        seen_done = set()
+        for chunk in streamed.out:
+            if chunk["done"]:
+                seen_done.add(chunk["id"])
+            elif chunk["id"] not in seen_done:
+                deltas_before_done[chunk["id"]] += 1
+        assert deltas_before_done["a"] >= 2
+
+    def test_single_token_request_streams_terminal_only(self, bundle):
+        from collections import deque
+
+        class FakeConsumer:
+            def __init__(self, msgs):
+                self.msgs = deque(msgs)
+
+            def try_pop(self):
+                return self.msgs.popleft() if self.msgs else None
+
+        class FakeReply:
+            def __init__(self):
+                self.out = []
+
+            def push(self, data):
+                self.out.append(json.loads(bytes(data).rstrip(b"\0").decode()))
+
+        _, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=32)
+        reply = FakeReply()
+        msg = json.dumps({"id": "one", "prompt": [5, 6], "steps": 1}
+                         ).encode().ljust(256, b"\0")
+        ChannelServer(sched, FakeConsumer([msg]), reply, msg_size=256,
+                      stream_interval=1).serve(1)
+        assert len(reply.out) == 1
+        chunk = reply.out[0]
+        assert chunk["done"] is True and len(chunk["delta"]) == 1
+
+    def test_stream_interval_validation(self, bundle):
+        _, model, params = bundle
+        sched = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=32)
+        with pytest.raises(ValueError, match="stream_interval"):
+            ChannelServer(sched, None, None, stream_interval=0)
+
+
 class TestSchedulerServeDriver:
     def test_duplicate_rids_do_not_hang(self, bundle):
         """serve() terminates by finish count, not distinct rids."""
