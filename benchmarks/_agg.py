@@ -1,0 +1,22 @@
+"""Shared repeat-aggregation helper for the benchmark drivers."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def median_rows(rows: list[dict]) -> dict:
+    """Field-wise median across repeated runs of one benchmark row.
+
+    Non-numeric fields come from the first run; numeric fields that are
+    constant across repeats (metadata like n_requests) keep their value and
+    type instead of being coerced to float by np.median.
+    """
+    merged = dict(rows[0])
+    for key in merged:
+        vals = [r.get(key) for r in rows]
+        if all(isinstance(v, (int, float)) and not isinstance(v, bool) for v in vals):
+            if all(v == vals[0] for v in vals):
+                merged[key] = vals[0]
+            else:
+                merged[key] = round(float(np.median(vals)), 4)
+    return merged

@@ -1,20 +1,28 @@
-"""Serving throughput/latency: serial engine vs continuous batching.
+"""Serving throughput/latency: serial engine vs continuous batching vs
+paged continuous batching.
 
 Same workload (requests of varied prompt/decode lengths, all submitted at
-t=0) through both serve paths:
+t=0) through the serve paths:
 
 * serial   — `ServeEngine`, one request end-to-end at a time;
-* continuous — `ContinuousBatchingScheduler`, admit-on-free-slot, one
-  vmapped decode tick across all active slots.
+* continuous — `ContinuousBatchingScheduler` (dense KV), admit-on-free-slot,
+  one vmapped decode tick across all active slots, host sync every tick;
+* continuous_paged — paged KV pool + device-resident decode loop: KV lives
+  in a shared block pool behind a page table, and `sync_interval` fused
+  decode+sample ticks run as one execution unit with tokens/positions/done
+  flags staying on device between host sync points.
 
 Reports aggregate decode tokens/s, per-request latency (submission at t=0 to
 reply, i.e. queueing included — the number a client sees), and
-**time-to-first-token** (submission to the first output token existing —
-what a streaming client perceives as responsiveness: serial requests wait
-for every earlier request to fully finish before their prefill, continuous
-requests get their first token at admission). Both paths run a warmup pass
-first so jit compilation is excluded. Writes benchmarks/BENCH_serve.json and
-contributes rows to benchmarks/results.csv via benchmarks/run.py.
+**time-to-first-token** (submission to the first output token existing).
+Paged output is asserted token-identical to the dense scheduler before any
+timing is trusted.
+
+Serve numbers swing badly under machine load, so measurement is
+median-of-N: a warmup pass compiles everything, then `repeats` measured
+passes per mode are aggregated field-wise by median (benchmarks/run.py
+--repeats N, default 1). Writes benchmarks/BENCH_serve.json and contributes
+rows to benchmarks/results.csv via benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -32,11 +40,15 @@ from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler
 from repro.serve.workload import synthetic_requests
 
+from ._agg import median_rows
+
 ARCH = "gemma3-1b"
 N_REQUESTS = 12
 MAX_BATCH = 8
 PROMPT_RANGE = (4, 12)
 STEPS_RANGE = (8, 24)
+PAGE_SIZE = 16
+SYNC_INTERVAL = 8  # empirically best on this workload's 8-24 step range
 
 
 def _stats(values, prefix):
@@ -51,14 +63,16 @@ def _stats(values, prefix):
 def _run_serial(engine, requests):
     t0 = time.monotonic()
     latencies, ttfts = [], []
+    tokens = {}
     for r in requests:
-        engine.generate(
+        result = engine.generate(
             np.asarray([r.prompt], dtype=np.int32),
             steps=r.max_new_tokens,
             on_first_token=lambda: ttfts.append(time.monotonic() - t0),
         )
+        tokens[r.rid] = result.tokens[0].tolist()
         latencies.append(time.monotonic() - t0)  # queued since t0
-    return time.monotonic() - t0, latencies, ttfts
+    return time.monotonic() - t0, latencies, ttfts, tokens
 
 
 def _run_continuous(sched, requests):
@@ -67,19 +81,24 @@ def _run_continuous(sched, requests):
     backlog = deque(requests)
     t0 = time.monotonic()
     latencies, ttfts = [], []
+    tokens = {}
     n_done = 0
     while n_done < len(requests):
         while backlog and sched.try_admit(backlog[0]):
             backlog.popleft()
             # admission runs the prefill: the request's first token exists now
             ttfts.append(time.monotonic() - t0)
-        for _fin in sched.step():
+        for fin in sched.step():
             latencies.append(time.monotonic() - t0)
+            tokens[fin.rid] = fin.tokens
             n_done += 1
-    return time.monotonic() - t0, latencies, ttfts
+    return time.monotonic() - t0, latencies, ttfts, tokens
 
 
-def run(csv_writer=None, *, smoke: bool = False) -> list[dict]:
+def run(csv_writer=None, *, smoke: bool = False, repeats: int = 1,
+        kv_mode: str = "both") -> list[dict]:
+    if kv_mode not in ("dense", "paged", "both"):
+        raise ValueError(f"kv_mode must be dense|paged|both, got {kv_mode!r}")
     n_requests = 4 if smoke else N_REQUESTS
     steps_range = (4, 8) if smoke else STEPS_RANGE
     cfg = get_config(ARCH, reduced=True)
@@ -93,51 +112,88 @@ def run(csv_writer=None, *, smoke: bool = False) -> list[dict]:
 
     with Runtime("jaxdev") as runtime:
         engine = ServeEngine(model, params, max_len=max_len, runtime=runtime)
-        sched = ContinuousBatchingScheduler(
-            model, params, max_batch=MAX_BATCH, max_len=max_len, runtime=runtime
-        )
+        targets = [("serial", _run_serial, engine)]
+        dense_sched = paged_sched = None
+        if kv_mode in ("dense", "both"):
+            dense_sched = ContinuousBatchingScheduler(
+                model, params, max_batch=MAX_BATCH, max_len=max_len, runtime=runtime
+            )
+            targets.append(("continuous", _run_continuous, dense_sched))
+        if kv_mode in ("paged", "both"):
+            paged_sched = ContinuousBatchingScheduler(
+                model, params, max_batch=MAX_BATCH, max_len=max_len, runtime=runtime,
+                kv_mode="paged", page_size=PAGE_SIZE, sync_interval=SYNC_INTERVAL,
+            )
+            targets.append(("continuous_paged", _run_continuous, paged_sched))
 
-        # warmup: compile prefill (per distinct prompt length) and decode units
-        _run_serial(engine, requests)
-        _run_continuous(sched, requests)
+        # warmup: compile prefill (per distinct prompt length) and decode
+        # units — and check paged output is token-identical to dense/serial
+        warm_tokens = {}
+        for mode, runner, target in targets:
+            warm_tokens[mode] = runner(target, requests)[3]
+        if "continuous_paged" in warm_tokens:
+            reference = warm_tokens.get("continuous", warm_tokens["serial"])
+            mismatched = [
+                rid for rid in reference
+                if warm_tokens["continuous_paged"][rid] != reference[rid]
+            ]
+            assert not mismatched, f"paged output diverged for {mismatched}"
+            print(f"[serve] paged output token-identical across {len(reference)} requests")
 
+        # measured repeats are interleaved round-robin across modes so a
+        # drift in background machine load biases every mode equally
+        per_repeat: dict[str, list[dict]] = {mode: [] for mode, _, _ in targets}
+        for _ in range(max(1, repeats)):
+            for mode, runner, target in targets:
+                wall, latencies, ttfts, _tokens = runner(target, requests)
+                per_repeat[mode].append({
+                    "bench": "serve",
+                    "mode": mode,
+                    "arch": ARCH,
+                    "n_requests": n_requests,
+                    "max_batch": 1 if mode == "serial" else MAX_BATCH,
+                    "sync_interval": SYNC_INTERVAL if mode == "continuous_paged" else 1,
+                    "repeats": max(1, repeats),
+                    "total_decode_tokens": total_tokens,
+                    "wall_s": round(wall, 4),
+                    "tokens_per_s": round(total_tokens / wall, 2),
+                    **_stats(latencies, "latency"),
+                    **_stats(ttfts, "ttft"),
+                })
         rows = []
-        for mode, runner, target in (
-            ("serial", _run_serial, engine),
-            ("continuous", _run_continuous, sched),
-        ):
-            wall, latencies, ttfts = runner(target, requests)
-            row = {
-                "bench": "serve",
-                "mode": mode,
-                "arch": ARCH,
-                "n_requests": n_requests,
-                "max_batch": MAX_BATCH if mode == "continuous" else 1,
-                "total_decode_tokens": total_tokens,
-                "wall_s": round(wall, 4),
-                "tokens_per_s": round(total_tokens / wall, 2),
-                **_stats(latencies, "latency"),
-                **_stats(ttfts, "ttft"),
-            }
+        for mode, _, _ in targets:
+            row = median_rows(per_repeat[mode])
             rows.append(row)
-            print(f"[serve] {mode:<10} {row['tokens_per_s']:>8.1f} tok/s  "
+            print(f"[serve] {mode:<16} {row['tokens_per_s']:>8.1f} tok/s  "
                   f"wall={row['wall_s']:.2f}s  p50={row['latency_p50_s']:.2f}s  "
                   f"p95={row['latency_p95_s']:.2f}s  ttft_mean={row['ttft_mean_s']:.3f}s")
 
-    speedup = rows[1]["tokens_per_s"] / rows[0]["tokens_per_s"]
-    ttft_ratio = rows[0]["ttft_mean_s"] / max(rows[1]["ttft_mean_s"], 1e-9)
-    print(f"[serve] continuous/serial aggregate speedup: {speedup:.2f}x, "
-          f"serial/continuous mean-TTFT ratio: {ttft_ratio:.2f}x")
+    by_mode = {row["mode"]: row for row in rows}
+    out = {"rows": rows, "repeats": max(1, repeats)}
+    if "continuous" in by_mode:
+        out["speedup_continuous_vs_serial"] = round(
+            by_mode["continuous"]["tokens_per_s"] / by_mode["serial"]["tokens_per_s"], 3
+        )
+        out["ttft_serial_over_continuous"] = round(
+            by_mode["serial"]["ttft_mean_s"]
+            / max(by_mode["continuous"]["ttft_mean_s"], 1e-9), 3,
+        )
+    if "continuous_paged" in by_mode:
+        out["speedup_paged_vs_serial"] = round(
+            by_mode["continuous_paged"]["tokens_per_s"] / by_mode["serial"]["tokens_per_s"], 3
+        )
+        if "continuous" in by_mode:
+            out["speedup_paged_vs_continuous"] = round(
+                by_mode["continuous_paged"]["tokens_per_s"]
+                / by_mode["continuous"]["tokens_per_s"], 3,
+            )
+            print(f"[serve] paged/continuous aggregate speedup: "
+                  f"{out['speedup_paged_vs_continuous']:.2f}x")
     if smoke:
         # smoke runs verify the script, they are not reference numbers:
         # never overwrite the tracked BENCH_serve.json with them
         print("[serve] smoke mode: skipping BENCH_serve.json write")
         return rows
-    out = {
-        "rows": rows,
-        "speedup_continuous_vs_serial": round(speedup, 3),
-        "ttft_serial_over_continuous": round(ttft_ratio, 3),
-    }
     path = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)

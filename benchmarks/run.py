@@ -1,10 +1,14 @@
 """Benchmark driver — one module per paper table/figure:
 
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run channels   # one
-    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny configs,
-                                                       # verifies the scripts
-                                                       # still run end-to-end
+    PYTHONPATH=src python -m benchmarks.run               # all
+    PYTHONPATH=src python -m benchmarks.run channels      # one
+    PYTHONPATH=src python -m benchmarks.run --smoke       # CI: tiny configs,
+                                                          # verifies the scripts
+                                                          # still run end-to-end
+    PYTHONPATH=src python -m benchmarks.run --repeats 5   # warmup + median-of-5
+                                                          # (serve numbers swing
+                                                          # badly under load)
+    PYTHONPATH=src python -m benchmarks.run serve --kv-mode paged
 
 Paper artifact map:
     bench_channels     -> Fig. 8   (ping-pong goodput, 2 comm backends)
@@ -12,15 +16,17 @@ Paper artifact map:
     bench_tasking_fib  -> Fig. 9   (fine-grained tasking overhead)
     bench_jacobi       -> Figs. 10/11 (coarse tasking + strong/weak scaling)
     bench_rooflines    -> EXPERIMENTS.md §Roofline source table
-    bench_serve        -> BENCH_serve.json (continuous vs serial serving)
+    bench_serve        -> BENCH_serve.json (serial vs continuous vs paged)
 Writes benchmarks/results.csv.
 """
 from __future__ import annotations
 
+import argparse
 import csv
-import sys
+import inspect
 import time
 
+from ._agg import median_rows
 from . import (
     bench_channels,
     bench_inference,
@@ -40,15 +46,50 @@ ALL = {
 }
 
 
+def _median_merge(rows_per_repeat: list[list[dict]]) -> list[dict]:
+    """Positional field-wise median across repeats (every repeat produces
+    the same row sequence; non-numeric fields come from the first run)."""
+    merged = []
+    for rows in zip(*rows_per_repeat):
+        row = median_rows(list(rows))
+        row["repeats"] = len(rows_per_repeat)
+        merged.append(row)
+    return merged
+
+
+def _run_bench(fn, *, smoke: bool, repeats: int, kv_mode: str | None) -> list[dict]:
+    kwargs = {}
+    accepted = inspect.signature(fn).parameters
+    if smoke:
+        kwargs["smoke"] = True
+    if kv_mode is not None and "kv_mode" in accepted:
+        kwargs["kv_mode"] = kv_mode
+    if repeats > 1 and "repeats" in accepted:
+        # the bench aggregates internally (and runs its own warmup pass)
+        return fn(**kwargs, repeats=repeats)
+    if repeats > 1:
+        fn(**kwargs)  # warmup iteration: compile caches, page caches — discarded
+        return _median_merge([fn(**kwargs) for _ in range(repeats)])
+    return fn(**kwargs)
+
+
 def main() -> None:
-    args = [a for a in sys.argv[1:]]
-    smoke = "--smoke" in args
-    names = [a for a in args if not a.startswith("--")] or list(ALL)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*", help=f"subset of {list(ALL)} (default: all)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="measured repetitions per bench (plus one warmup "
+                    "iteration); rows report the field-wise median")
+    ap.add_argument("--kv-mode", choices=("dense", "paged", "both"), default=None,
+                    help="KV-cache mode(s) for benches that serve (bench_serve)")
+    args = ap.parse_args()
+    names = args.names or list(ALL)
     all_rows: list[dict] = []
     for name in names:
-        print(f"=== bench: {name}{' (smoke)' if smoke else ''} ===")
+        print(f"=== bench: {name}{' (smoke)' if args.smoke else ''} ===")
         t0 = time.monotonic()
-        rows = ALL[name](smoke=smoke) if smoke else ALL[name]()
+        rows = _run_bench(ALL[name], smoke=args.smoke, repeats=args.repeats,
+                          kv_mode=args.kv_mode)
         print(f"=== {name}: {len(rows)} rows in {time.monotonic() - t0:.1f}s ===\n")
         all_rows.extend(rows)
 
@@ -57,7 +98,7 @@ def main() -> None:
         for k in row:
             if k not in fields:
                 fields.append(k)
-    out = "benchmarks/results_smoke.csv" if smoke else "benchmarks/results.csv"
+    out = "benchmarks/results_smoke.csv" if args.smoke else "benchmarks/results.csv"
     with open(out, "w", newline="") as f:
         writer = csv.DictWriter(f, fieldnames=fields)
         writer.writeheader()

@@ -88,6 +88,124 @@ class MemoryManager(abc.ABC):
                 f"{space.kind}:{space.device_id}:{space.index}"
             )
 
+    # -- pool helpers ---------------------------------------------------------
+    def register_tensor_slot(self, space: MemorySpace, array: Any) -> LocalMemorySlot:
+        """Register a framework tensor (anything exposing ``nbytes``) as a
+        local memory slot — the paper's registration of an allocation
+        received from a math library (§3.1.3), here a device array the
+        serving layer allocated through jax."""
+        nbytes = int(getattr(array, "nbytes", 0))
+        if nbytes <= 0:
+            raise ValueError("tensor has no bytes to register")
+        return self.register_local_memory_slot(space, array, nbytes)
+
+    def create_slot_pool(
+        self, space: MemorySpace, block_bytes: int, n_blocks: int, **kwargs
+    ) -> "MemorySlotPool":
+        """Allocate ONE backing slot of `n_blocks` fixed-size blocks and wrap
+        it in a `MemorySlotPool`: sub-allocation then happens by block index,
+        without further manager round-trips (allocate-once, place-many)."""
+        backing = self.allocate_local_memory_slot(space, block_bytes * n_blocks)
+        return MemorySlotPool(block_bytes, n_blocks, backing=(backing,), **kwargs)
+
+
+class MemorySlotPool:
+    """Fixed-size block pool over memory slots allocated/registered ONCE
+    through a `MemoryManager` (paper §3.1.3: the runtime owns placement, the
+    hot path only moves indices).
+
+    Blocks are handed out as integer indices. Admission is reservation-based:
+    `reserve(n)` claims capacity up front (so a consumer admitted against the
+    pool can never starve mid-flight), while `draw(n)` materializes physical
+    block indices lazily against the caller's reservation. `free(blocks)`
+    returns physical blocks; `unreserve(n)` returns unclaimed capacity.
+
+    `block_slot(backing_idx, block)` describes one block as a registered
+    sub-slot (offset view) of a backing slot — the form a communication
+    manager can memcpy from/to.
+    """
+
+    def __init__(
+        self,
+        block_bytes: int,
+        n_blocks: int,
+        *,
+        backing: Sequence[LocalMemorySlot] = (),
+        reserved_blocks: Sequence[int] = (),
+    ):
+        if n_blocks <= 0:
+            raise ValueError("pool needs at least one block")
+        self.block_bytes = int(block_bytes)
+        self.n_blocks = int(n_blocks)
+        self.backing = tuple(backing)
+        pinned = set(reserved_blocks)
+        self._free: list[int] = [i for i in range(n_blocks) if i not in pinned]
+        self._capacity = len(self._free)
+        self._reserved = 0
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (pinned blocks, e.g. a null page, excluded)."""
+        return self._capacity
+
+    @property
+    def blocks_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_used(self) -> int:
+        return self._capacity - len(self._free)
+
+    @property
+    def blocks_available(self) -> int:
+        """Free blocks not spoken for by an outstanding reservation."""
+        return len(self._free) - self._reserved
+
+    # -- reservation-based allocation ---------------------------------------
+    def can_reserve(self, n: int) -> bool:
+        return n <= self.blocks_available
+
+    def reserve(self, n: int) -> bool:
+        """Claim capacity for `n` blocks to be drawn later. Returns False
+        (no side effect) when the pool cannot guarantee them."""
+        if not self.can_reserve(n):
+            return False
+        self._reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        self._reserved -= n
+        if self._reserved < 0:  # pragma: no cover - caller bookkeeping bug
+            raise ValueError("unreserve exceeds outstanding reservations")
+
+    def draw(self, n: int) -> list[int]:
+        """Materialize `n` physical blocks against an earlier reservation."""
+        if n > self._reserved:
+            raise ValueError(f"draw({n}) exceeds reservation ({self._reserved})")
+        if n > len(self._free):  # pragma: no cover - reservation guards this
+            raise ValueError("pool out of blocks despite reservation")
+        self._reserved -= n
+        out, self._free = self._free[:n], self._free[n:]
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if not 0 <= b < self.n_blocks:
+                raise ValueError(f"block {b} out of range [0, {self.n_blocks})")
+        self._free.extend(blocks)
+
+    # -- HiCR slot views ------------------------------------------------------
+    def block_slot(self, backing_idx: int, block: int) -> LocalMemorySlot:
+        base = self.backing[backing_idx]
+        return LocalMemorySlot(
+            base.memory_space,
+            self.block_bytes,
+            base.handle,
+            offset=base.offset + block * self.block_bytes,
+            registered=True,
+        )
+
 
 class CommunicationManager(abc.ABC):
     """Mediates all communication via memcpy/fence and creates/exchanges

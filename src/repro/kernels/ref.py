@@ -126,6 +126,33 @@ def decode_attention(
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q,
+    k_pool,
+    v_pool,
+    page_table,
+    pos,
+    *,
+    scale: Optional[float] = None,
+):
+    """Single-token attention over a paged (block-pool) KV cache.
+
+    q: (B, H, hd); k_pool, v_pool: (P, page, KV, hd) — pages shared by every
+    sequence; page_table: (B, n_pages) int32 physical page per logical page;
+    pos: scalar or (B,) last valid logical slot.
+
+    Semantics of record for the Pallas paged kernel: gather each sequence's
+    pages into a dense (n_pages*page) view, then run the dense decode oracle
+    with slot-validity masking — padded table entries (null page 0) sit past
+    `pos` and mask away, so no special-casing is needed. Returns (B, H, hd).
+    """
+    B = q.shape[0]
+    _, page, KV, hd = k_pool.shape
+    k_eff = k_pool[page_table].reshape(B, -1, KV, hd)
+    v_eff = v_pool[page_table].reshape(B, -1, KV, hd)
+    return decode_attention(q, k_eff, v_eff, pos, scale=scale)
+
+
 def gated_linear_scan(
     q,
     k,

@@ -3,7 +3,13 @@ through either the serial engine or the continuous-batching scheduler, on a
 registry-built Runtime (no concrete-backend imports here).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
-        --mode continuous --max-batch 8 --requests 16 [--backend jaxdev]
+        --mode continuous --max-batch 8 --requests 16 [--backend jaxdev] \
+        [--kv-mode paged --page-size 16 --sync-interval 8 --pool-pages N]
+
+``--kv-mode paged`` serves from a paged KV-cache pool (block-pool tensors
+behind a scheduler-owned page table, admission bounded by free pages) with
+the device-resident decode loop (`--sync-interval` fused ticks per host
+sync). ``--kv-mode dense`` is the per-slot dense-cache baseline.
 
 The channel-driven multi-instance front door (2 producers + 1 server over
 the localsim fabric) is wired in examples/serve_demo.py.
@@ -31,6 +37,16 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--backend", default="jaxdev", help="registry backend for the Runtime")
     ap.add_argument("--mode", choices=("serial", "continuous"), default="continuous")
+    ap.add_argument("--kv-mode", choices=("dense", "paged"), default="dense",
+                    help="continuous mode: dense per-slot caches, or the paged "
+                    "KV pool + device-resident decode loop")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV pool page size in cache positions (paged mode)")
+    ap.add_argument("--sync-interval", type=int, default=8,
+                    help="device decode ticks per host sync (paged mode)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical KV pool pages (default: every slot can "
+                    "hold a full-length sequence)")
     ap.add_argument("--max-batch", type=int, default=8, help="scheduler slots (continuous mode)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -68,13 +84,20 @@ def main(argv=None):
                 print(f"{r.rid}: {result.tokens[0][:8].tolist()}...")
         else:
             sched = ContinuousBatchingScheduler(
-                model, params, max_batch=args.max_batch, max_len=max_len, runtime=runtime
+                model, params, max_batch=args.max_batch, max_len=max_len, runtime=runtime,
+                kv_mode=args.kv_mode, page_size=args.page_size,
+                pool_pages=args.pool_pages, sync_interval=args.sync_interval,
             )
             results = sched.serve(requests)
             for r in requests:
                 fin = results[r.rid]
                 print(f"{fin.rid}: {fin.tokens[:8]}... ({fin.finish_reason})")
-            print(f"scheduler: {sched.ticks} decode ticks for {len(requests)} requests")
+            print(f"scheduler: {sched.ticks} decode ticks for {len(requests)} requests"
+                  f" (kv_mode={args.kv_mode})")
+            if args.kv_mode == "paged":
+                prog = sched.active_progress()
+                print(f"kv pool: {prog.pages_used} pages used / "
+                      f"{prog.pages_free} free after drain")
     dt = time.time() - t0
     print(f"served {len(requests)} requests / {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s, mode={args.mode}, backend={args.backend})")

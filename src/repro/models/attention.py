@@ -13,6 +13,7 @@ When stacked for scan-over-layers a leading ("layers",) axis is prepended.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -164,3 +165,138 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, *, window: int = 0,
     S_buf = min(window, max_len) if window else max_len
     shape = (batch, S_buf, KV, hd)
     return jnp.zeros(shape, dtype=dtype), jnp.zeros(shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache: block-pool layout + paged decode attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of a paged KV cache.
+
+    Full-attention layers share one growing page table (``n_pages_seq``
+    logical pages per slot) over a pool of ``num_pages`` physical pages;
+    physical page 0 is the *null page* — never allocated, it absorbs the
+    masked writes of inactive slots and pads unallocated table entries.
+
+    Sliding-window layers keep their ring buffers, but paged: each slot owns
+    a fixed set of ``w_pages`` ring pages (identity mapping, allocated for
+    the slot's lifetime), because a warm ring never grows or shrinks. When
+    ``max_len`` fits under the window the ring never wraps and those layers
+    degrade to full-attention paging (``ring`` False), exactly mirroring the
+    dense cache's ``S_buf = min(window, max_len)`` rule.
+    """
+
+    max_slots: int
+    page_size: int
+    cache_len: int  # max_len rounded up to a page multiple
+    n_pages_seq: int  # full-layer page-table width (logical pages per slot)
+    num_pages: int  # full-pool physical pages, null page included
+    window: int
+    ring: bool
+    w_pages: int  # ring pages per slot (0 when not ring)
+
+    @property
+    def ring_pages_total(self) -> int:
+        return self.max_slots * self.w_pages
+
+    def ring_table(self) -> jnp.ndarray:
+        """(max_slots, w_pages) identity page table: slot s owns pages
+        [s*w_pages, (s+1)*w_pages). Static for the pool's lifetime."""
+        base = jnp.arange(self.max_slots, dtype=jnp.int32)[:, None] * self.w_pages
+        return base + jnp.arange(self.w_pages, dtype=jnp.int32)[None, :]
+
+    def pages_for(self, n_positions: int) -> int:
+        """Full-table pages needed to hold `n_positions` cache positions."""
+        return -(-min(n_positions, self.cache_len) // self.page_size)
+
+
+def paged_layout(
+    cfg: ArchConfig,
+    *,
+    max_slots: int,
+    max_len: int,
+    page_size: int,
+    num_pages: Optional[int] = None,
+) -> PagedLayout:
+    cache_len = -(-max_len // page_size) * page_size
+    n_pages_seq = cache_len // page_size
+    w = cfg.sliding_window or 0
+    ring = bool(w) and w <= cache_len
+    if ring and w % page_size != 0:
+        raise ValueError(
+            f"page_size {page_size} must divide sliding_window {w} "
+            f"(ring buffers are paged at page granularity)"
+        )
+    if num_pages is None:
+        # default: every slot can hold a full-length sequence (same ceiling
+        # as the dense cache) + the null page
+        num_pages = max_slots * n_pages_seq + 1
+    return PagedLayout(
+        max_slots=max_slots,
+        page_size=page_size,
+        cache_len=cache_len,
+        n_pages_seq=n_pages_seq,
+        num_pages=int(num_pages),
+        window=w,
+        ring=ring,
+        w_pages=(w // page_size) if ring else 0,
+    )
+
+
+def init_paged_kv_pool(cfg: ArchConfig, n_pages: int, page_size: int, *, dtype=jnp.bfloat16):
+    """One layer's (k, v) block-pool tensors: (n_pages, page, KV, hd)."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_pages, page_size, KV, hd)
+    return jnp.zeros(shape, dtype=dtype), jnp.zeros(shape, dtype=dtype)
+
+
+def paged_decode_self_attention(
+    cfg: ArchConfig,
+    p,
+    x,
+    pool_k,
+    pool_v,
+    table,
+    pos,
+    active,
+    *,
+    page_size: int,
+    window: int = 0,
+):
+    """One-token decode step against a paged KV pool, natively batched.
+
+    x: (B, 1, d); pool_k/v: (P, page, KV, hd) — this layer's block pool,
+    shared by all slots; table: (B, n_pages) logical->physical page map;
+    pos: (B,) per-slot positions; active: (B,) bool — inactive slots have
+    their K/V writes routed to the null page (full layers) or clamped into
+    their own ring pages, so they can never corrupt a live slot's cache.
+
+    `window` > 0 selects ring semantics: writes wrap at ``pos % window`` and
+    validity saturates at the full ring. Returns (out (B,1,d), (pool_k, pool_v)).
+    """
+    B = x.shape[0]
+    positions = pos[:, None]  # (B, 1) — RoPE at each slot's own position
+    q, k, v = _project_qkv(cfg, p, x, positions)  # (B,1,H,hd)/(B,1,KV,hd)
+
+    cache_pos = (pos % window) if window else pos
+    cache_pos = jnp.where(active, cache_pos, 0)
+    page_idx = cache_pos // page_size
+    offset = cache_pos % page_size
+    phys = jnp.take_along_axis(table, page_idx[:, None], axis=1)[:, 0]
+    if not window:
+        # full layers: inactive slots write the null page (their table rows
+        # may reference pages since freed and reallocated)
+        phys = jnp.where(active, phys, 0)
+    pool_k = pool_k.at[phys, offset].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, offset].set(v[:, 0].astype(pool_v.dtype))
+
+    # ring buffers: every slot holds an in-window position once warm
+    S_eff = table.shape[1] * page_size
+    eff_pos = jnp.minimum(pos, S_eff - 1)
+    impl = "pallas" if cfg.use_pallas else "ref"
+    out = ops.paged_decode_attention(q[:, 0], pool_k, pool_v, table, eff_pos, impl=impl)
+    proj = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
+    return proj[:, None, :], (pool_k, pool_v)

@@ -25,6 +25,26 @@ from . import encdec, hybrid, transformer, vlm, xlstm_model
 
 
 @dataclasses.dataclass(frozen=True)
+class PagedOps:
+    """Paged KV-cache entry points for families whose decode state is a pure
+    KV cache (vLLM-style block-pool serving; serve/batching.py's paged path).
+
+    layout(max_slots=..., max_len=..., page_size=..., num_pages=None)
+        -> PagedLayout (static cache geometry)
+    init_pools(layout) -> per-layer block-pool pytree (no batch dim)
+    commit_prefill(layout, pools, dense_state, full_row, ring_row) -> pools
+        scatter one slot's B=1 dense prefill cache into its pages
+    decode_step(layout, params, pools, full_table, tokens, pos, active)
+        -> (logits (B,V), pools): one batched decode tick over the pool
+    """
+
+    layout: Callable
+    init_pools: Callable
+    commit_prefill: Callable
+    decode_step: Callable
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelBundle:
     cfg: ArchConfig
     init: Callable  # (key) -> (params, axes)
@@ -38,6 +58,9 @@ class ModelBundle:
     #: positions — serving paths MUST use this so decode steps never write
     #: past the cache (the default `prefill` sizes the cache to the prompt).
     make_prefill: Callable = None
+    #: Paged KV-cache ops, or None for families without a paged decode path
+    #: (recurrent/hybrid states are O(1) or mixed; VLM needs prefix plumbing).
+    paged_ops: PagedOps = None
 
     def state_specs(self, shape: ShapeConfig):
         """Abstract state pytree for decode dry-runs (no allocation)."""
@@ -127,6 +150,12 @@ def _build_transformer(cfg: ArchConfig) -> ModelBundle:
         input_specs=functools.partial(_text_specs, cfg),
         make_batch=lambda key, shape: _make_text_batch(cfg, shape, key),
         make_prefill=make_prefill,
+        paged_ops=PagedOps(
+            layout=functools.partial(transformer.make_paged_layout, cfg),
+            init_pools=functools.partial(transformer.init_paged_caches, cfg),
+            commit_prefill=functools.partial(transformer.commit_prefill_paged, cfg),
+            decode_step=functools.partial(transformer.lm_paged_decode_step, cfg),
+        ),
     )
 
 

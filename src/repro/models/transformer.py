@@ -18,9 +18,13 @@ import jax.numpy as jnp
 
 from repro.configs import ArchConfig
 from .attention import (
+    PagedLayout,
     decode_self_attention,
     init_attention,
     init_kv_cache,
+    init_paged_kv_pool,
+    paged_decode_self_attention,
+    paged_layout,
     prefill_attention,
     self_attention,
 )
@@ -254,6 +258,173 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
             "v": jnp.broadcast_to(vl[None], (n_tail,) + vl.shape),
         }
     return caches
+
+
+# ---------------------------------------------------------------------------
+# paged KV-cache serving: block-pool caches + page-table decode
+# ---------------------------------------------------------------------------
+
+
+def make_paged_layout(cfg: ArchConfig, **kwargs) -> PagedLayout:
+    return paged_layout(cfg, **kwargs)
+
+
+def init_paged_caches(cfg: ArchConfig, layout: PagedLayout):
+    """Per-layer block-pool tensors matching the scan grouping, shared by
+    every slot (no batch dim — the page table is the slot axis).
+
+    Full-attention layers pool `layout.num_pages` pages addressed by the
+    dynamic full table; sliding-window layers pool each slot's fixed ring
+    pages (identity table) — unless the window exceeds the cache, in which
+    case they page exactly like full layers (`layout.ring` False)."""
+    cd = dtype_of(cfg.compute_dtype)
+    unit_len, n_units, n_tail = unit_structure(cfg)
+    k_full, v_full = init_paged_kv_pool(cfg, layout.num_pages, layout.page_size, dtype=cd)
+    if not has_units(cfg):
+        L = cfg.num_layers
+        return {
+            "k": jnp.broadcast_to(k_full[None], (L,) + k_full.shape),
+            "v": jnp.broadcast_to(v_full[None], (L,) + v_full.shape),
+        }
+    n_local = layout.ring_pages_total if layout.ring else layout.num_pages
+    k_loc, v_loc = init_paged_kv_pool(cfg, n_local, layout.page_size, dtype=cd)
+    g = cfg.global_interval
+    pools = {
+        "units": {
+            "k_local": jnp.broadcast_to(k_loc[None, None], (n_units, g - 1) + k_loc.shape),
+            "v_local": jnp.broadcast_to(v_loc[None, None], (n_units, g - 1) + v_loc.shape),
+            "k_global": jnp.broadcast_to(k_full[None], (n_units,) + k_full.shape),
+            "v_global": jnp.broadcast_to(v_full[None], (n_units,) + v_full.shape),
+        }
+    }
+    if n_tail:
+        pools["tail"] = {
+            "k": jnp.broadcast_to(k_loc[None], (n_tail,) + k_loc.shape),
+            "v": jnp.broadcast_to(v_loc[None], (n_tail,) + v_loc.shape),
+        }
+    return pools
+
+
+def _split_pages(cache, page_size: int):
+    """(..., B=1, S, KV, hd) dense cache -> (..., S//page, page, KV, hd)."""
+    c = jnp.squeeze(cache, axis=-4)
+    n = c.shape[-3] // page_size
+    return c.reshape(c.shape[:-3] + (n, page_size) + c.shape[-2:])
+
+
+def commit_prefill_paged(cfg: ArchConfig, layout: PagedLayout, pools, dense_caches, full_row, ring_row):
+    """Scatter one slot's B=1 dense prefill caches into its pool pages.
+
+    full_row: (n_pages_seq,) physical pages, 0-padded past the allocation —
+    the padded writes land on the null page; ring_row: (w_pages,) the slot's
+    own ring pages (ignored when the layout is not ring-paged)."""
+    p = layout.page_size
+    local_row = ring_row if layout.ring else full_row
+    if "k" in pools:
+        return {
+            "k": pools["k"].at[:, full_row].set(_split_pages(dense_caches["k"], p)),
+            "v": pools["v"].at[:, full_row].set(_split_pages(dense_caches["v"], p)),
+        }
+    du, pu = dense_caches["units"], pools["units"]
+    new_pools = {
+        "units": {
+            "k_local": pu["k_local"].at[:, :, local_row].set(_split_pages(du["k_local"], p)),
+            "v_local": pu["v_local"].at[:, :, local_row].set(_split_pages(du["v_local"], p)),
+            "k_global": pu["k_global"].at[:, full_row].set(_split_pages(du["k_global"], p)),
+            "v_global": pu["v_global"].at[:, full_row].set(_split_pages(du["v_global"], p)),
+        }
+    }
+    if "tail" in pools:
+        new_pools["tail"] = {
+            "k": pools["tail"]["k"].at[:, local_row].set(_split_pages(dense_caches["tail"]["k"], p)),
+            "v": pools["tail"]["v"].at[:, local_row].set(_split_pages(dense_caches["tail"]["v"], p)),
+        }
+    return new_pools
+
+
+def _paged_decode_layer(cfg, layout, p_l, h, pool_kv, table, pos, active, *, window):
+    attn_in = rms_norm(h, p_l["ln1"], eps=cfg.norm_eps)
+    attn_out, new_kv = paged_decode_self_attention(
+        cfg, p_l["attn"], attn_in, pool_kv[0], pool_kv[1], table, pos, active,
+        page_size=layout.page_size, window=window,
+    )
+    h = h + attn_out
+    ffn_in = rms_norm(h, p_l["ln2"], eps=cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_ffn(cfg, p_l["moe"], ffn_in)
+    else:
+        y = ffn(cfg, p_l["ffn"], ffn_in)
+    return h + y, new_kv
+
+
+def lm_paged_decode_step(cfg: ArchConfig, layout: PagedLayout, params, pools, full_table, tokens, pos, active):
+    """One batched decode tick over paged caches.
+
+    tokens: (B,) last tokens; pos: (B,) per-slot positions; active: (B,)
+    bool (inactive slots compute garbage that never escapes: K/V writes are
+    null-routed, callers mask sampled tokens). Returns (logits (B,V), pools).
+    """
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed(params["embed"], tokens[:, None], compute_dtype=cd)  # (B,1,d)
+    ring_table = layout.ring_table() if layout.ring else None
+    local_table = ring_table if layout.ring else full_table
+    local_window = layout.window if layout.ring else 0
+
+    if "layers" in params:
+        def body(carry, xs):
+            p_l, k, v = xs
+            new_h, (nk, nv) = _paged_decode_layer(
+                cfg, layout, p_l, carry, (k, v), full_table, pos, active, window=0
+            )
+            return new_h, (nk, nv)
+
+        h, (nk, nv) = maybe_scan(cfg, body, h, (params["layers"], pools["k"], pools["v"]))
+        new_pools = {"k": nk, "v": nv}
+    else:
+        g = cfg.global_interval
+
+        def unit_body(carry, xs):
+            p_unit, c = xs
+            hh = carry
+            nk_l, nv_l = [], []
+            for i in range(g - 1):
+                p_l = jax.tree_util.tree_map(lambda x: x[i], p_unit)
+                hh, (nk, nv) = _paged_decode_layer(
+                    cfg, layout, p_l, hh, (c["k_local"][i], c["v_local"][i]),
+                    local_table, pos, active, window=local_window,
+                )
+                nk_l.append(nk)
+                nv_l.append(nv)
+            p_l = jax.tree_util.tree_map(lambda x: x[g - 1], p_unit)
+            hh, (nkg, nvg) = _paged_decode_layer(
+                cfg, layout, p_l, hh, (c["k_global"], c["v_global"]),
+                full_table, pos, active, window=0,
+            )
+            new_c = {
+                "k_local": jnp.stack(nk_l), "v_local": jnp.stack(nv_l),
+                "k_global": nkg, "v_global": nvg,
+            }
+            return hh, new_c
+
+        h, new_unit_pools = maybe_scan(cfg, unit_body, h, (params["units"], pools["units"]))
+        new_pools = {"units": new_unit_pools}
+        if "tail" in params:
+            def tail_body(carry, xs):
+                p_l, k, v = xs
+                new_h, (nk, nv) = _paged_decode_layer(
+                    cfg, layout, p_l, carry, (k, v), local_table, pos, active,
+                    window=local_window,
+                )
+                return new_h, (nk, nv)
+
+            h, (nk, nv) = maybe_scan(
+                cfg, tail_body, h, (params["tail"], pools["tail"]["k"], pools["tail"]["v"])
+            )
+            new_pools["tail"] = {"k": nk, "v": nv}
+
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings)
+    return logits, new_pools
 
 
 def _prefill_layer(cfg, p_l, h, cache_kv, *, window, prefix_len=0):

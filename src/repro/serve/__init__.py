@@ -1,4 +1,5 @@
 """Serving substrate over the model zoo: serial engine (`engine`), batched
-decode core (`batching`), continuous-batching scheduler (`scheduler`), and
-the HiCR-channel front door (`server`)."""
-from . import batching, engine, scheduler, server, workload  # noqa: F401
+decode core (`batching`: dense SlotDecoder + paged device-resident
+PagedSlotDecoder), KV page pool (`kv_pool`), continuous-batching scheduler
+(`scheduler`), and the HiCR-channel front door (`server`)."""
+from . import batching, engine, kv_pool, scheduler, server, workload  # noqa: F401

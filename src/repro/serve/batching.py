@@ -7,6 +7,13 @@ vmapped decode step over all slots — shapes never change as requests of
 different lengths join and leave, so the decode execution unit compiles
 exactly once and stays jit-stable for the lifetime of the server.
 
+`PagedSlotDecoder` is the paged, device-resident variant: the KV caches live
+in a shared block pool (`serve/kv_pool.py`) addressed through a page table,
+and the decode loop is fused — `sync_interval` decode+sample ticks run as
+ONE execution unit with tokens, positions, and done-flags staying on device
+throughout; the host sees a small (slots, sync_interval) token buffer and
+the done mask once per interval instead of a device round-trip per token.
+
 All computation is dispatched through a HiCR compute manager obtained from a
 `Runtime` facade (registry-built, backend-agnostic): prefill, the batched
 decode step, and the state scatter are execution units; the decoder itself
@@ -25,6 +32,8 @@ import numpy as np
 
 from repro.core.runtime import Runtime
 from repro.models.model_zoo import ModelBundle
+
+from .kv_pool import PagedKVPool
 
 
 class SlotDecoder:
@@ -75,8 +84,27 @@ class SlotDecoder:
         self._pack_unit = cm.create_execution_unit(pack, name="pack_slot", jit=True)
 
         self._states = None  # stacked state pytree, lazily sized from prefill
+        self._cache_capacity: Optional[int] = None
         self.last_tokens = np.zeros((max_slots,), dtype=np.int32)
         self.pos = np.zeros((max_slots,), dtype=np.int32)
+
+    @property
+    def cache_capacity(self) -> int:
+        """Cache positions a slot can actually hold, derived from the
+        allocated state buffers (the scheduler's eviction ceiling) — not a
+        separately-tracked token budget that could drift from them."""
+        if self._cache_capacity is not None:
+            return self._cache_capacity
+        if self._states is not None and self.model.cfg.family in ("dense", "moe", "vlm"):
+            # KV leaves are (..., S_buf, KV, hd); the deepest buffer (global
+            # layers; ring layers are shorter) is the real ceiling
+            self._cache_capacity = max(
+                leaf.shape[-3]
+                for leaf in jax.tree_util.tree_leaves(self._states)
+                if leaf.ndim >= 4
+            )
+            return self._cache_capacity
+        return self.max_len
 
     # -- admission ----------------------------------------------------------
     def prefill(self, prompt: Sequence[int]):
@@ -121,3 +149,192 @@ class SlotDecoder:
         self.last_tokens = new_tokens.copy()
         self.pos = self.pos + 1
         return new_tokens
+
+
+class PagedSlotDecoder:
+    """Paged, device-resident decode core.
+
+    KV state lives in a shared block pool (one `(pages, page, KV, hd)`
+    tensor per layer, allocated once through the HiCR MemoryManager); each
+    slot addresses its pages through the scheduler-owned page table. Decode
+    control state — last tokens, positions, done flags, per-slot budgets —
+    stays on device: `run_interval()` executes `sync_interval` fused
+    decode+sample ticks as ONE execution unit and transfers only the
+    per-interval token buffer and done mask back to the host. A slot that
+    finishes mid-interval freezes in place (its writes are routed to the
+    null page) and is harvested at the next sync point, so outputs are
+    token-identical to the per-tick dense path.
+    """
+
+    def __init__(
+        self,
+        model: ModelBundle,
+        params,
+        *,
+        max_slots: int = 8,
+        max_len: int = 256,
+        page_size: int = 16,
+        pool_pages: Optional[int] = None,
+        sync_interval: int = 8,
+        runtime: Optional[Runtime] = None,
+    ):
+        if model.paged_ops is None:
+            raise ValueError(
+                f"model family {model.cfg.family!r} has no paged KV-cache path; "
+                "use kv_mode='dense'"
+            )
+        if sync_interval < 1:
+            raise ValueError("sync_interval must be >= 1")
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.sync_interval = sync_interval
+        self.rt = runtime or Runtime("jaxdev")
+        po = model.paged_ops
+        self.layout = po.layout(
+            max_slots=max_slots, max_len=max_len, page_size=page_size,
+            num_pages=pool_pages,
+        )
+        self.kv = PagedKVPool(self.rt, model, self.layout)
+
+        cm = self.rt.compute_manager
+        layout = self.layout
+        prefill_fn = model.make_prefill(layout.cache_len)
+
+        def paged_prefill(p, b):
+            # greedy pick fused into the unit: admission transfers one int32,
+            # not a logits row, and dispatches no eager argmax op
+            logits, state = prefill_fn(p, b)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+        self._prefill_unit = cm.create_execution_unit(
+            paged_prefill, name="paged_prefill", jit=True
+        )
+
+        # per-slot ring rows are static: keep them resident on device so an
+        # admission never re-uploads them
+        if layout.ring:
+            ring_rows = layout.ring_table()
+        else:
+            ring_rows = jnp.zeros((max_slots, 1), jnp.int32)
+        self._ring_rows = [ring_rows[s] for s in range(max_slots)]
+
+        # control columns of the (slots, 6) device-resident table
+        TOK, POS, DONE, STEPS, EOS, CAP = range(6)
+
+        def commit_and_arm(pools, state, full_row, ring_row, ctl, arm):
+            """One dispatch per admission: scatter the prefilled dense cache
+            into the slot's pages AND arm the slot's control row. `arm` is
+            [slot, token, pos, steps_left, eos, cap] — a single int32 upload."""
+            pools = po.commit_prefill(layout, pools, state, full_row, ring_row)
+            row = jnp.stack([arm[1], arm[2], jnp.int32(0), arm[3], arm[4], arm[5]])
+            return pools, ctl.at[arm[0]].set(row)
+
+        self._commit_unit = cm.create_execution_unit(
+            commit_and_arm, name="commit_and_arm", jit=True
+        )
+
+        K = sync_interval
+
+        def fused_ticks(p, pools, table, ctl):
+            """K decode+sample ticks, device-resident. Emits a (slots, K)
+            buffer of sampled tokens (-1 where the slot was already done);
+            freezes a slot the tick it hits eos / budget / capacity."""
+            out0 = jnp.full((ctl.shape[0], K), -1, jnp.int32)
+
+            def tick(i, carry):
+                pools, ctl, out = carry
+
+                def run(c):
+                    pools, ctl, out = c
+                    tokens, pos = ctl[:, TOK], ctl[:, POS]
+                    active = ctl[:, DONE] == 0
+                    logits, pools = po.decode_step(
+                        layout, p, pools, table, tokens, pos, active
+                    )
+                    new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    tok = jnp.where(active, new_tok, tokens)
+                    out = out.at[:, i].set(jnp.where(active, tok, -1))
+                    live = active.astype(jnp.int32)
+                    steps_left = ctl[:, STEPS] - live
+                    pos = pos + live
+                    done = ~active | (
+                        active
+                        & ((tok == ctl[:, EOS]) | (steps_left <= 0) | (pos >= ctl[:, CAP]))
+                    )
+                    ctl = jnp.stack(
+                        [tok, pos, done.astype(jnp.int32), steps_left,
+                         ctl[:, EOS], ctl[:, CAP]], axis=1,
+                    )
+                    return pools, ctl, out
+
+                # batch fully drained mid-interval: skip the model entirely
+                return jax.lax.cond(jnp.all(ctl[:, DONE] == 1), lambda c: c, run, carry)
+
+            pools, ctl, out = jax.lax.fori_loop(0, K, tick, (pools, ctl, out0))
+            # single host-transfer payload: [tokens x K | done | pos] per slot
+            summary = jnp.concatenate([out, ctl[:, [DONE, POS]]], axis=1)
+            return pools, ctl, summary
+
+        self._fused_unit = cm.create_execution_unit(
+            fused_ticks, name=f"fused_decode_x{K}", jit=True
+        )
+
+        # device-resident control table (host reads a summary per interval);
+        # DONE=1 everywhere: free slots never decode
+        ctl0 = np.zeros((max_slots, 6), np.int32)
+        ctl0[:, DONE] = 1
+        ctl0[:, EOS] = -1  # -1: no eos (real tokens are >= 0)
+        self.ctl = jnp.asarray(ctl0)
+
+    # -- admission ----------------------------------------------------------
+    def prefill(self, prompt: Sequence[int]):
+        """B=1 dense prefill with page-aligned cache headroom. Returns
+        (first greedy token, dense decoder state to commit into pages)."""
+        tokens = jnp.asarray(np.asarray(prompt, dtype=np.int32)[None, :])
+        first, state = self.rt.run(self._prefill_unit, self.params, {"tokens": tokens})
+        return int(np.asarray(first)[0]), state
+
+    def load(
+        self,
+        slot: int,
+        state,
+        last_token: int,
+        pos: int,
+        *,
+        steps_left: int,
+        eos_id: Optional[int],
+        capacity: int,
+        full_row: np.ndarray,
+    ) -> None:
+        """Commit a prefilled dense state into `slot`'s pool pages and arm
+        its device-side control row. `full_row` is the slot's page-table row
+        (0-padded past the pages drawn so far); `capacity` is the position
+        ceiling implied by the slot's page reservation."""
+        if not 0 <= slot < self.max_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.max_slots})")
+        arm = np.asarray(
+            [slot, last_token, pos, steps_left,
+             eos_id if eos_id is not None else -1, capacity],
+            dtype=np.int32,
+        )
+        self.kv.pools, self.ctl = self.rt.run(
+            self._commit_unit, self.kv.pools, state,
+            jnp.asarray(full_row, jnp.int32), self._ring_rows[slot],
+            self.ctl, jnp.asarray(arm),
+        )
+
+    # -- one fused interval --------------------------------------------------
+    def run_interval(self, full_table: np.ndarray):
+        """Run `sync_interval` fused ticks against the current page table.
+        Returns (token_buffer (slots, K) with -1 for inactive ticks,
+        done mask (slots,), positions (slots,)) as host arrays — the only
+        device->host traffic of the interval."""
+        self.kv.pools, self.ctl, summary = self.rt.run(
+            self._fused_unit,
+            self.params, self.kv.pools, jnp.asarray(full_table, jnp.int32), self.ctl,
+        )
+        summary = np.asarray(summary)  # the interval's only device->host copy
+        K = self.sync_interval
+        return summary[:, :K], summary[:, K].astype(bool), summary[:, K + 1]

@@ -1,0 +1,106 @@
+"""Paged KV-cache pool: HiCR-registered block-pool tensors + page accounting.
+
+This is the serve-side owner of the paper's memory-management operations
+(§3.1.3) applied to KV-cache serving: the per-layer block-pool tensors are
+allocated ONCE at construction and registered with the runtime's
+`MemoryManager` as local memory slots; every subsequent cache operation in
+the hot path moves page *indices*, never pages — admission reserves pages,
+decode growth draws them, eviction frees them, all against a
+`MemorySlotPool` (core/managers.py) whose null page 0 is pinned so inactive
+slots' masked writes can never land on live data.
+
+The tensors themselves are functionally updated by the decode execution
+units (XLA rewrites buffers in place where it can); the registered slots
+record the allocation the pool handed to the compute layer — the same
+allocate-once/place-many contract Specx task views and HDArray slices
+expose, with the runtime, not the kernel author, owning placement.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.managers import MemorySlotPool
+
+
+class PagedKVPool:
+    """Block-pool KV cache for the paged serve path.
+
+    Parameters
+    ----------
+    runtime:
+        Runtime whose `MemoryManager` registers the pool tensors (a runtime
+        without a memory role skips registration but keeps accounting).
+    model:
+        `ModelBundle` with `paged_ops` (transformer families).
+    layout:
+        `PagedLayout` from `model.paged_ops.layout(...)`.
+    """
+
+    def __init__(self, runtime, model, layout):
+        if model.paged_ops is None:
+            raise ValueError(
+                f"model family {model.cfg.family!r} has no paged KV-cache path; "
+                "use kv_mode='dense'"
+            )
+        self.layout = layout
+        #: Per-layer block-pool tensors (the device-resident cache state;
+        #: replaced functionally by commit/decode execution units).
+        self.pools = model.paged_ops.init_pools(layout)
+
+        leaves = jax.tree_util.tree_leaves(self.pools)
+        self.slots: List = []
+        mm = getattr(runtime, "memory_manager", None)
+        if mm is not None:
+            space = mm.memory_spaces()[0]
+            for leaf in leaves:
+                try:
+                    self.slots.append(mm.register_tensor_slot(space, leaf))
+                except TypeError:
+                    # host-backed managers register a host view of the array
+                    self.slots.append(
+                        mm.register_tensor_slot(space, np.asarray(leaf))
+                    )
+
+        # one logical page spans every full-layer pool: aggregate their bytes
+        full_bytes = sum(
+            leaf.nbytes for leaf in leaves if leaf.shape[-4] == layout.num_pages
+        )
+        self.accounting = MemorySlotPool(
+            max(1, full_bytes // layout.num_pages),
+            layout.num_pages,
+            backing=tuple(self.slots),
+            reserved_blocks=(0,),  # null page: padding + inactive-write sink
+        )
+
+    # -- page operations (hot path: indices only) ----------------------------
+    def can_admit(self, n_pages: int) -> bool:
+        return self.accounting.can_reserve(n_pages)
+
+    def reserve(self, n_pages: int) -> bool:
+        return self.accounting.reserve(n_pages)
+
+    def draw(self, n_pages: int) -> List[int]:
+        return self.accounting.draw(n_pages)
+
+    def free(self, pages: Sequence[int], *, unreserve: int = 0) -> None:
+        """Return a finished slot's physical pages and release whatever part
+        of its reservation was never drawn."""
+        self.accounting.free(pages)
+        if unreserve:
+            self.accounting.unreserve(unreserve)
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def pages_free(self) -> int:
+        return self.accounting.blocks_free
+
+    @property
+    def pages_used(self) -> int:
+        return self.accounting.blocks_used
+
+    @property
+    def capacity(self) -> int:
+        return self.accounting.capacity

@@ -8,9 +8,22 @@ moment a request hits EOS, its token budget, or the cache ceiling. Freed
 slots are immediately reusable by the next admission, so the server sustains
 a full batch under a steady request stream.
 
-Token semantics match the serial `ServeEngine.generate` exactly: the first
-emitted token is the greedy pick from the prefill logits; each subsequent
-token comes from one decode step at the request's own position.
+Two KV-cache modes:
+
+* ``kv_mode="dense"`` — every slot owns a `max_len`-deep cache
+  (`SlotDecoder`); one vmapped decode step per scheduler tick, tokens
+  synced to host every tick.
+* ``kv_mode="paged"`` — slots share a block-pool cache addressed through a
+  scheduler-owned page table (`PagedSlotDecoder`): pages are reserved at
+  admission (admission control is page availability, not a slot-count
+  proxy), drawn as a request grows, and freed at eviction. Each scheduler
+  tick runs `sync_interval` fused decode+sample ticks device-side, so
+  tokens/positions/done-flags only cross to the host at sync points.
+
+Token semantics match the serial `ServeEngine.generate` exactly in both
+modes: the first emitted token is the greedy pick from the prefill logits;
+each subsequent token comes from one decode step at the request's own
+position.
 """
 from __future__ import annotations
 
@@ -18,10 +31,12 @@ import dataclasses
 from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.runtime import Runtime
 from repro.models.model_zoo import ModelBundle
 
-from .batching import SlotDecoder
+from .batching import PagedSlotDecoder, SlotDecoder
 
 
 @dataclasses.dataclass
@@ -44,12 +59,25 @@ class FinishedRequest:
 
 
 @dataclasses.dataclass
+class SchedulerProgress:
+    """Snapshot for the streaming front door: tokens emitted so far per
+    *active* request (copies), plus the KV-pool occupancy in paged mode
+    (None/None in dense mode — there is no shared pool to meter)."""
+
+    requests: Dict[str, List[int]]
+    pages_free: Optional[int] = None
+    pages_used: Optional[int] = None
+
+
+@dataclasses.dataclass
 class _Active:
     """Request-table row: one admitted request bound to a decoder slot."""
 
     request: Request
     slot: int
     emitted: List[int]
+    pages: List[int] = dataclasses.field(default_factory=list)  # drawn pages
+    reserved_left: int = 0  # reserved-but-undrawn pages
 
 
 class ContinuousBatchingScheduler:
@@ -61,12 +89,34 @@ class ContinuousBatchingScheduler:
         max_batch: int = 8,
         max_len: int = 256,
         runtime: Optional[Runtime] = None,
+        kv_mode: str = "dense",
+        page_size: int = 16,
+        pool_pages: Optional[int] = None,
+        sync_interval: int = 8,
     ):
+        if kv_mode not in ("dense", "paged"):
+            raise ValueError(f"kv_mode must be 'dense' or 'paged', got {kv_mode!r}")
+        self.kv_mode = kv_mode
         self.max_batch = max_batch
         self.max_len = max_len
-        self.decoder = SlotDecoder(
-            model, params, max_slots=max_batch, max_len=max_len, runtime=runtime
-        )
+        if kv_mode == "dense":
+            self.decoder = SlotDecoder(
+                model, params, max_slots=max_batch, max_len=max_len, runtime=runtime
+            )
+        else:
+            self.decoder = PagedSlotDecoder(
+                model, params, max_slots=max_batch, max_len=max_len,
+                page_size=page_size, pool_pages=pool_pages,
+                sync_interval=sync_interval, runtime=runtime,
+            )
+            #: scheduler-owned page table: logical page j of slot s ->
+            #: physical pool page (0 = null/unallocated)
+            self._page_table = np.zeros(
+                (max_batch, self.decoder.layout.n_pages_seq), dtype=np.int32
+            )
+            #: host mirror of per-slot positions (set at admission, refreshed
+            #: at every sync point) — growth never reads back from device
+            self._pos_host = np.zeros((max_batch,), dtype=np.int32)
         # multimodal prefixes occupy cache positions before the text prompt
         self._prefix = model.cfg.vision_tokens if model.cfg.family == "vlm" else 0
         self._table: List[Optional[_Active]] = [None] * max_batch
@@ -86,25 +136,34 @@ class ContinuousBatchingScheduler:
     def active_ids(self) -> List[str]:
         return [row.request.rid for row in self._table if row is not None]
 
-    def active_progress(self) -> Dict[str, List[int]]:
-        """Tokens emitted so far per *active* request (copies). This is what
-        the streaming front door diffs against its per-request high-water
-        mark to form delta chunks."""
-        return {
+    def active_progress(self) -> SchedulerProgress:
+        """Streaming snapshot: what the front door diffs against its
+        per-request high-water marks to form delta chunks, plus pool
+        occupancy in paged mode."""
+        requests = {
             row.request.rid: list(row.emitted)
             for row in self._table
             if row is not None
         }
+        if self.kv_mode == "paged":
+            kv = self.decoder.kv
+            return SchedulerProgress(
+                requests=requests, pages_free=kv.pages_free, pages_used=kv.pages_used
+            )
+        return SchedulerProgress(requests=requests)
 
     # -- admission (any time, including mid-decode) -------------------------
     def try_admit(self, request: Request) -> bool:
         """Prefill `request` and seat it in a free slot. Returns False when
-        the table is full; requests finishing at their very first token are
-        completed without consuming a slot."""
+        the table is full — or, in paged mode, when the KV pool cannot
+        reserve the request's worst-case pages (page-availability admission
+        control); requests finishing at their very first token are completed
+        without consuming a slot."""
         if request.max_new_tokens < 1:
             raise ValueError(f"request {request.rid!r}: max_new_tokens must be >= 1")
         prompt_len = len(request.prompt)
-        if self._prefix + prompt_len + request.max_new_tokens > self.max_len:
+        total_positions = self._prefix + prompt_len + request.max_new_tokens
+        if total_positions > self.max_len:
             raise ValueError(
                 f"request {request.rid!r} needs {prompt_len + request.max_new_tokens} "
                 f"cache positions (+{self._prefix} prefix), scheduler max_len is {self.max_len}"
@@ -113,14 +172,56 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"request id {request.rid!r} is already active")
         if not self._free:
             return False
-        first, state = self.decoder.prefill(request.prompt)
+
+        pages_total = 0
+        if self.kv_mode == "paged":
+            layout = self.decoder.layout
+            pages_total = layout.pages_for(total_positions)
+            if pages_total > self.decoder.kv.capacity:
+                raise ValueError(
+                    f"request {request.rid!r} needs {pages_total} KV pages, "
+                    f"pool capacity is {self.decoder.kv.capacity}"
+                )
+            if not self.decoder.kv.reserve(pages_total):
+                return False  # pool pressure: retry once pages free up
+
+        try:
+            first, state = self.decoder.prefill(request.prompt)
+        except BaseException:
+            if pages_total:  # a failed prefill must not strand the reservation
+                self.decoder.kv.free((), unreserve=pages_total)
+            raise
         emitted = [first]
         if request.max_new_tokens == 1 or first == request.eos_id:
+            if pages_total:
+                self.decoder.kv.free((), unreserve=pages_total)
             self._finished.append(self._finish(request, emitted))
             return True
         slot = self._free.popleft()
-        self.decoder.load(slot, state, first, self._prefix + prompt_len)
-        self._table[slot] = _Active(request=request, slot=slot, emitted=emitted)
+        if self.kv_mode == "dense":
+            self.decoder.load(slot, state, first, self._prefix + prompt_len)
+            row = _Active(request=request, slot=slot, emitted=emitted)
+        else:
+            layout = self.decoder.layout
+            # draw pages for everything prefill wrote + the first decode
+            # write; the rest of the reservation is drawn as the slot grows
+            pages_now = layout.pages_for(self._prefix + prompt_len + 1)
+            drawn = self.decoder.kv.draw(pages_now)
+            self._page_table[slot, :] = 0
+            self._page_table[slot, : len(drawn)] = drawn
+            self.decoder.load(
+                slot, state, first, self._prefix + prompt_len,
+                steps_left=request.max_new_tokens - 1,
+                eos_id=request.eos_id,
+                capacity=pages_total * layout.page_size,
+                full_row=self._page_table[slot],
+            )
+            self._pos_host[slot] = self._prefix + prompt_len
+            row = _Active(
+                request=request, slot=slot, emitted=emitted,
+                pages=drawn, reserved_left=pages_total - pages_now,
+            )
+        self._table[slot] = row
         return True
 
     def _finish(self, request: Request, emitted: List[int]) -> FinishedRequest:
@@ -139,14 +240,25 @@ class ContinuousBatchingScheduler:
 
     # -- one scheduler tick --------------------------------------------------
     def step(self) -> List[FinishedRequest]:
-        """Run one batched decode tick over all active slots and evict every
-        request that completed. Also drains requests that finished during
-        admission. Returns the newly finished requests."""
+        """Advance decoding and evict every request that completed. Also
+        drains requests that finished during admission. Dense mode runs one
+        batched decode tick; paged mode runs one fused `sync_interval`-tick
+        interval device-side and harvests at the sync point. Returns the
+        newly finished requests."""
         done, self._finished = self._finished, []
         if self.active_count == 0:
             return done
+        if self.kv_mode == "dense":
+            return done + self._step_dense()
+        return done + self._step_paged()
+
+    def _step_dense(self) -> List[FinishedRequest]:
+        done: List[FinishedRequest] = []
         new_tokens = self.decoder.step()
         self.ticks += 1
+        # the eviction ceiling comes from the decoder's actual allocated
+        # cache depth, not a separately-tracked token budget
+        capacity = self.decoder.cache_capacity
         for slot, row in enumerate(self._table):
             if row is None:
                 continue
@@ -155,9 +267,45 @@ class ContinuousBatchingScheduler:
             req = row.request
             hit_eos = tok == req.eos_id
             out_of_budget = len(row.emitted) >= req.max_new_tokens
-            out_of_cache = int(self.decoder.pos[slot]) >= self.max_len
+            out_of_cache = int(self.decoder.pos[slot]) >= capacity
             if hit_eos or out_of_budget or out_of_cache:
                 done.append(self._finish(req, row.emitted))
+                self._table[slot] = None
+                self._free.append(slot)
+        return done
+
+    def _grow_pages(self) -> None:
+        """Before an interval: draw enough reserved pages for every active
+        slot to cover `sync_interval` more positions. Reservations were made
+        at admission, so a draw can never fail mid-flight."""
+        layout = self.decoder.layout
+        pos = self._pos_host
+        for slot, row in enumerate(self._table):
+            if row is None or not row.reserved_left:
+                continue
+            target = layout.pages_for(int(pos[slot]) + self.decoder.sync_interval)
+            delta = min(target - len(row.pages), row.reserved_left)
+            if delta > 0:
+                drawn = self.decoder.kv.draw(delta)
+                self._page_table[slot, len(row.pages) : len(row.pages) + delta] = drawn
+                row.pages.extend(drawn)
+                row.reserved_left -= delta
+
+    def _step_paged(self) -> List[FinishedRequest]:
+        done: List[FinishedRequest] = []
+        self._grow_pages()
+        out_buf, done_mask, pos = self.decoder.run_interval(self._page_table)
+        self._pos_host[:] = pos
+        self.ticks += self.decoder.sync_interval
+        for slot, row in enumerate(self._table):
+            if row is None:
+                continue
+            ticks = out_buf[slot]
+            row.emitted.extend(int(t) for t in ticks[ticks >= 0])
+            if done_mask[slot]:
+                done.append(self._finish(row.request, row.emitted))
+                self.decoder.kv.free(row.pages, unreserve=row.reserved_left)
+                self._page_table[slot, :] = 0
                 self._table[slot] = None
                 self._free.append(slot)
         return done

@@ -156,7 +156,7 @@ class ChannelServer:
     def _stream_deltas(self) -> None:
         """Push delta chunks for every active request that grew since its
         last chunk (delta = tokens past the streamed high-water mark)."""
-        for rid, emitted in self.scheduler.active_progress().items():
+        for rid, emitted in self.scheduler.active_progress().requests.items():
             sent = self._streamed.get(rid, 0)
             if len(emitted) > sent:
                 self._streamed[rid] = len(emitted)

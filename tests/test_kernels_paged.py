@@ -1,0 +1,174 @@
+"""Paged decode-attention: Pallas kernel parity vs the dense reference
+(interpret mode — runs on CPU CI), the paged/dense oracle equivalence, the
+page-pool accounting, and one-step paged-vs-dense model parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.managers import MemorySlotPool
+from repro.kernels import ops, ref
+from repro.models.attention import paged_layout
+
+
+def _pool_case(key, *, B, H, KV, hd, page, n_pages, pool_pages, dtype):
+    """Random pool + per-row page tables (distinct non-null pages)."""
+    rng = np.random.default_rng(key)
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), dtype)
+    k_pool = jnp.asarray(rng.standard_normal((pool_pages, page, KV, hd)), dtype)
+    v_pool = jnp.asarray(rng.standard_normal((pool_pages, page, KV, hd)), dtype)
+    table = np.stack(
+        [rng.permutation(pool_pages - 1)[:n_pages] + 1 for _ in range(B)]
+    ).astype(np.int32)
+    return q, k_pool, v_pool, jnp.asarray(table)
+
+
+class TestPagedKernelParity:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref_uneven_lengths_partial_pages(self, dtype):
+        """Per-row positions ending mid-page (partial last page) and at page
+        boundaries, fp32 and bf16, GQA head grouping."""
+        B, H, KV, hd, page, n = 4, 8, 2, 16, 8, 4
+        q, kp, vp, tbl = _pool_case(0, B=B, H=H, KV=KV, hd=hd, page=page,
+                                    n_pages=n, pool_pages=24, dtype=dtype)
+        pos = jnp.asarray([0, 7, 12, 31], jnp.int32)  # 1 slot / boundary / mid / full
+        got = ops.paged_decode_attention(q, kp, vp, tbl, pos, impl="pallas")
+        want = ref.paged_decode_attention(q, kp, vp, tbl, pos)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+        )
+
+    def test_matches_dense_reference_on_gathered_layout(self):
+        """Paging is a layout change only: gathering a row's pages into a
+        dense cache and running the dense oracle gives the same output."""
+        B, H, KV, hd, page, n = 3, 4, 1, 16, 16, 3
+        q, kp, vp, tbl = _pool_case(1, B=B, H=H, KV=KV, hd=hd, page=page,
+                                    n_pages=n, pool_pages=16, dtype=jnp.float32)
+        pos = jnp.asarray([5, 20, 47], jnp.int32)
+        k_dense = kp[tbl].reshape(B, n * page, KV, hd)
+        v_dense = vp[tbl].reshape(B, n * page, KV, hd)
+        dense = ref.decode_attention(q, k_dense, v_dense, pos)
+        for impl in ("ref", "pallas"):
+            got = ops.paged_decode_attention(q, kp, vp, tbl, pos, impl=impl)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(dense), atol=1e-5)
+
+    def test_null_page_padding_is_masked(self):
+        """Table entries past the allocation are padded with the null page
+        (0); whatever garbage it holds must never leak into the output."""
+        B, H, KV, hd, page = 1, 4, 1, 16, 8
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        kp = jnp.asarray(rng.standard_normal((6, page, KV, hd)), jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((6, page, KV, hd)), jnp.float32)
+        kp = kp.at[0].set(1e9)  # poison the null page
+        vp = vp.at[0].set(1e9)
+        tbl = jnp.asarray([[2, 4, 0, 0]], jnp.int32)  # 2 real pages, 2 padded
+        pos = jnp.asarray([11], jnp.int32)
+        for impl in ("ref", "pallas"):
+            out = np.asarray(ops.paged_decode_attention(q, kp, vp, tbl, pos, impl=impl))
+            assert np.all(np.isfinite(out)) and np.max(np.abs(out)) < 1e3, impl
+
+    def test_scalar_pos_broadcasts(self):
+        B, H, KV, hd, page, n = 2, 4, 2, 8, 8, 2
+        q, kp, vp, tbl = _pool_case(3, B=B, H=H, KV=KV, hd=hd, page=page,
+                                    n_pages=n, pool_pages=8, dtype=jnp.float32)
+        a = ops.paged_decode_attention(q, kp, vp, tbl, 9, impl="pallas")
+        b = ops.paged_decode_attention(q, kp, vp, tbl, jnp.asarray([9, 9]), impl="pallas")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+class TestPagedLayout:
+    def test_ring_when_window_fits(self, ):
+        from repro.configs import get_config
+
+        cfg = get_config("gemma3-1b", reduced=True)  # sliding_window=16
+        lay = paged_layout(cfg, max_slots=4, max_len=37, page_size=16)
+        assert (lay.cache_len, lay.n_pages_seq) == (48, 3)
+        assert lay.ring and lay.w_pages == 1 and lay.ring_pages_total == 4
+        rt = np.asarray(lay.ring_table())
+        assert rt.shape == (4, 1) and rt[:, 0].tolist() == [0, 1, 2, 3]
+        assert lay.pages_for(1) == 1 and lay.pages_for(17) == 2
+
+    def test_window_larger_than_cache_degrades_to_full(self):
+        from repro.configs import get_config
+
+        cfg = get_config("gemma3-1b", reduced=True)
+        lay = paged_layout(cfg, max_slots=2, max_len=12, page_size=4)
+        assert not lay.ring and lay.w_pages == 0  # window 16 > cache 12
+
+    def test_page_size_must_divide_window(self):
+        from repro.configs import get_config
+
+        cfg = get_config("gemma3-1b", reduced=True)
+        with pytest.raises(ValueError, match="must divide sliding_window"):
+            paged_layout(cfg, max_slots=2, max_len=64, page_size=12)
+
+
+class TestMemorySlotPool:
+    def test_reserve_draw_free_cycle(self):
+        pool = MemorySlotPool(64, 8, reserved_blocks=(0,))
+        assert pool.capacity == 7 and pool.blocks_free == 7
+        assert pool.reserve(5)
+        assert pool.blocks_available == 2
+        assert not pool.reserve(3)  # over-reserve refused, no side effect
+        assert pool.blocks_available == 2
+        drawn = pool.draw(3)
+        assert 0 not in drawn and len(set(drawn)) == 3
+        assert pool.blocks_used == 3
+        pool.free(drawn, )
+        pool.unreserve(2)
+        assert pool.blocks_available == 7 and pool.blocks_used == 0
+
+    def test_draw_beyond_reservation_raises(self):
+        pool = MemorySlotPool(64, 4)
+        pool.reserve(1)
+        with pytest.raises(ValueError, match="exceeds reservation"):
+            pool.draw(2)
+
+    def test_block_slot_views_offset_into_backing(self):
+        from repro.core.stateful import LocalMemorySlot
+        from repro.core.stateless import MemorySpace
+
+        space = MemorySpace(kind="ram", index=0, device_id="host-0", size_bytes=1024)
+        backing = LocalMemorySlot(space, 256, bytearray(256))
+        pool = MemorySlotPool(64, 4, backing=(backing,))
+        view = pool.block_slot(0, 2)
+        assert (view.offset, view.size_bytes, view.registered) == (128, 64, True)
+
+
+class TestPagedModelStepParity:
+    def test_one_step_matches_dense_decode(self):
+        """lm_paged_decode_step == lm_decode_step for a freshly committed
+        prefill, on the homogeneous-stack arch (units arch covered end-to-end
+        in test_serve.py's paged identity test)."""
+        from repro.configs import get_config
+        from repro.models import build
+
+        cfg = get_config("granite-20b", reduced=True)
+        model = build(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        po = model.paged_ops
+        layout = po.layout(max_slots=2, max_len=20, page_size=8)
+        pools = po.init_pools(layout)
+        prompt = [3, 1, 4, 1, 5]
+        prefill = model.make_prefill(layout.cache_len)
+        logits, state = prefill(params, {"tokens": jnp.asarray([prompt], jnp.int32)})
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+        dense_logits, _ = model.decode_step(
+            params, state, {"tokens": tok[:, None], "pos": jnp.int32(len(prompt))}
+        )
+        row = np.zeros((layout.n_pages_seq,), np.int32)
+        row[: layout.pages_for(len(prompt) + 1)] = [1, 2][: layout.pages_for(len(prompt) + 1)]
+        pools = po.commit_prefill(layout, pools, state, jnp.asarray(row), jnp.zeros((1,), jnp.int32))
+        table = jnp.asarray(np.stack([row, np.zeros_like(row)]))
+        paged_logits, _ = po.decode_step(
+            layout, params, pools, table,
+            jnp.asarray([int(tok[0]), 0], jnp.int32),
+            jnp.asarray([len(prompt), 0], jnp.int32),
+            jnp.asarray([True, False]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(dense_logits[0]), np.asarray(paged_logits[0]), atol=1e-5
+        )

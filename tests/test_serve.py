@@ -194,6 +194,141 @@ class TestContinuousBatchingScheduler:
             sched.try_admit(Request(rid="big", prompt=[1] * 10, max_new_tokens=10))
 
 
+class TestPagedScheduler:
+    """kv_mode='paged': block-pool KV cache + device-resident decode loop.
+    Paging and interval fusion are scheduling/storage changes only — outputs
+    must stay token-identical to the dense path (and hence to the serial
+    engine, which the dense path is tested against above)."""
+
+    def test_paged_matches_serial_engine_tokens(self, bundle, engine):
+        """Extends the scheduler-vs-serial identity test: the paged decoder
+        with sync_interval>1 (mid-interval finishes freeze in place) still
+        reproduces the serial engine's tokens exactly."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=4, max_len=64,
+            kv_mode="paged", page_size=16, sync_interval=4,
+        )
+        reqs = _workload(cfg, 6)
+        results = sched.serve(reqs)
+        for r in reqs:
+            serial = engine.generate(
+                np.asarray([r.prompt], dtype=np.int32), steps=r.max_new_tokens
+            ).tokens[0].tolist()
+            assert results[r.rid].tokens == serial, r.rid
+        assert sched.decoder.kv.pages_used == 0  # every eviction freed its pages
+
+    def test_paged_matches_dense_with_eos_mid_interval(self, bundle, engine):
+        """An eos hit inside a fused interval must cut the emission at the
+        same token as the per-tick dense path."""
+        cfg, model, params = bundle
+        prompt = [7, 3, 9, 1]
+        chain = engine.generate(np.asarray([prompt], dtype=np.int32), steps=8).tokens[0].tolist()
+        eos = chain[3]
+        stop = chain.index(eos)
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=64,
+            kv_mode="paged", sync_interval=5,
+        )
+        results = sched.serve([Request(rid="e", prompt=prompt, max_new_tokens=8, eos_id=eos)])
+        assert results["e"].finish_reason == "eos"
+        assert results["e"].tokens == chain[: stop + 1]
+
+    def test_page_availability_admission_control(self, bundle):
+        """Admission is bounded by free pool pages, not just free slots: a
+        pool sized for one request backpressures the second until eviction
+        frees its pages, and a request larger than the whole pool is
+        rejected as unservable."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=4, max_len=48,
+            kv_mode="paged", page_size=16, pool_pages=4, sync_interval=4,
+        )
+        a = Request(rid="a", prompt=[1] * 10, max_new_tokens=20)
+        b = Request(rid="b", prompt=[2] * 10, max_new_tokens=20)
+        assert sched.try_admit(a)
+        assert sched.free_slots > 0 and not sched.try_admit(b)  # page pressure
+        results = {}
+        while "a" not in results:
+            for fin in sched.step():
+                results[fin.rid] = fin
+        assert sched.try_admit(b)  # freed pages readmit
+        # a request needing more pages than the whole pool holds can never
+        # be admitted: permanently unservable, not backpressure
+        tiny = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=48,
+            kv_mode="paged", page_size=16, pool_pages=3, sync_interval=4,
+        )
+        with pytest.raises(ValueError, match="KV pages"):
+            tiny.try_admit(Request(rid="big", prompt=[3] * 30, max_new_tokens=17))
+
+    def test_active_progress_surfaces_pool_occupancy(self, bundle):
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=32,
+            kv_mode="paged", page_size=16, sync_interval=2,
+        )
+        assert sched.try_admit(Request(rid="p", prompt=[1, 2, 3], max_new_tokens=6))
+        prog = sched.active_progress()
+        assert set(prog.requests) == {"p"} and len(prog.requests["p"]) == 1
+        assert prog.pages_used >= 1
+        assert prog.pages_free == sched.decoder.kv.capacity - prog.pages_used
+        # dense mode has no shared pool to meter
+        dense = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=32)
+        dprog = dense.active_progress()
+        assert dprog.pages_free is None and dprog.pages_used is None
+
+    def test_paged_channel_server_matches_terse_protocol(self, bundle):
+        """The channel front door over a paged scheduler settles the same
+        token lists as the dense one (transport + storage orthogonality)."""
+        from collections import deque
+
+        class FakeConsumer:
+            def __init__(self, msgs):
+                self.msgs = deque(msgs)
+
+            def try_pop(self):
+                return self.msgs.popleft() if self.msgs else None
+
+        class FakeReply:
+            def __init__(self):
+                self.out = []
+
+            def push(self, data):
+                self.out.append(json.loads(bytes(data).rstrip(b"\0").decode()))
+
+        _, model, params = bundle
+        reqs = [
+            {"id": "a", "prompt": [1, 2, 3], "steps": 9},
+            {"id": "b", "prompt": [4, 5, 6, 7], "steps": 6},
+        ]
+        msgs = [json.dumps(r).encode().ljust(256, b"\0") for r in reqs]
+        dense = ContinuousBatchingScheduler(model, params, max_batch=2, max_len=32)
+        terse = FakeReply()
+        ChannelServer(dense, FakeConsumer(list(msgs)), terse, msg_size=256).serve(2)
+        paged = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=32, kv_mode="paged", sync_interval=3
+        )
+        pr = FakeReply()
+        ChannelServer(paged, FakeConsumer(list(msgs)), pr, msg_size=256).serve(2)
+        assert {r["id"]: r["tokens"] for r in pr.out} == \
+            {r["id"]: r["tokens"] for r in terse.out}
+
+    def test_unknown_kv_mode_rejected(self, bundle):
+        _, model, params = bundle
+        with pytest.raises(ValueError, match="kv_mode"):
+            ContinuousBatchingScheduler(model, params, kv_mode="sparse")
+
+    def test_paged_requires_family_support(self, bundle):
+        """Families without a pure-KV decode state get a clear error."""
+        cfg = get_config("xlstm-125m", reduced=True)
+        model = build(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="no paged KV-cache path"):
+            ContinuousBatchingScheduler(model, params, max_batch=2, max_len=32,
+                                        kv_mode="paged")
+
+
 class TestChannelServer:
     def test_requests_over_mpsc_channel_continuous(self):
         """Two producer instances stream 2 requests each; one server instance
