@@ -1,5 +1,5 @@
 """Serving throughput/latency: serial engine vs continuous batching vs
-paged continuous batching.
+paged continuous batching vs the data-parallel fleet.
 
 Same workload (requests of varied prompt/decode lengths, all submitted at
 t=0) through the serve paths:
@@ -10,7 +10,13 @@ t=0) through the serve paths:
 * continuous_paged — paged KV pool + device-resident decode loop: KV lives
   in a shared block pool behind a page table, and `sync_interval` fused
   decode+sample ticks run as one execution unit with tokens/positions/done
-  flags staying on device between host sync points.
+  flags staying on device between host sync points;
+* fleet — router + FLEET_WORKERS worker instances over the localsim
+  InstanceManager, the total slot budget split across workers. Fleet wall
+  time INCLUDES instance spawn and per-worker compilation (each pass builds
+  a fresh fleet — that end-to-end cost is the fleet story); on one CPU
+  device the workers time-share the hardware, so this row measures the
+  orchestration overhead ceiling, not a speedup.
 
 Reports aggregate decode tokens/s, per-request latency (submission at t=0 to
 reply, i.e. queueing included — the number a client sees), and
@@ -49,6 +55,7 @@ PROMPT_RANGE = (4, 12)
 STEPS_RANGE = (8, 24)
 PAGE_SIZE = 16
 SYNC_INTERVAL = 8  # empirically best on this workload's 8-24 step range
+FLEET_WORKERS = 2
 
 
 def _stats(values, prefix):
@@ -95,6 +102,44 @@ def _run_continuous(sched, requests):
     return time.monotonic() - t0, latencies, ttfts, tokens
 
 
+class _TimingSink:
+    """Client-facing fleet stream that timestamps every merged chunk."""
+
+    def __init__(self):
+        self.chunks = []
+        self.stamps = []
+
+    def push(self, chunk):
+        self.stamps.append(time.monotonic())
+        self.chunks.append(chunk)
+
+
+def _run_fleet(spec, requests):
+    from repro.serve.router import reassemble, run_fleet
+
+    model, params, max_len = spec
+    sink = _TimingSink()
+    t0 = time.monotonic()
+    run_fleet(
+        model, params, requests, sink=sink, n_workers=FLEET_WORKERS,
+        max_batch=max(1, MAX_BATCH // FLEET_WORKERS), max_len=max_len,
+        stream_interval=4, launch_timeout=900,
+    )
+    wall = time.monotonic() - t0
+    first_seen, last_seen = {}, {}
+    for stamp, chunk in zip(sink.stamps, sink.chunks):
+        rid = chunk.get("id")
+        first_seen.setdefault(rid, stamp)
+        last_seen[rid] = stamp
+    ttfts = [t - t0 for t in first_seen.values()]
+    latencies = [t - t0 for t in last_seen.values()]
+    tokens = {
+        rid: res["tokens"] for rid, res in reassemble(sink.chunks).items()
+        if "error" not in res
+    }
+    return wall, latencies, ttfts, tokens
+
+
 def run(csv_writer=None, *, smoke: bool = False, repeats: int = 1,
         kv_mode: str = "both") -> list[dict]:
     if kv_mode not in ("dense", "paged", "both"):
@@ -125,20 +170,24 @@ def run(csv_writer=None, *, smoke: bool = False, repeats: int = 1,
                 kv_mode="paged", page_size=PAGE_SIZE, sync_interval=SYNC_INTERVAL,
             )
             targets.append(("continuous_paged", _run_continuous, paged_sched))
+        targets.append(("fleet", _run_fleet, (model, params, max_len)))
 
         # warmup: compile prefill (per distinct prompt length) and decode
-        # units — and check paged output is token-identical to dense/serial
+        # units — and check paged + fleet output is token-identical to
+        # dense/serial before any timing is trusted
         warm_tokens = {}
         for mode, runner, target in targets:
             warm_tokens[mode] = runner(target, requests)[3]
-        if "continuous_paged" in warm_tokens:
-            reference = warm_tokens.get("continuous", warm_tokens["serial"])
-            mismatched = [
-                rid for rid in reference
-                if warm_tokens["continuous_paged"][rid] != reference[rid]
-            ]
-            assert not mismatched, f"paged output diverged for {mismatched}"
-            print(f"[serve] paged output token-identical across {len(reference)} requests")
+        reference = warm_tokens.get("continuous", warm_tokens["serial"])
+        for checked in ("continuous_paged", "fleet"):
+            if checked in warm_tokens:
+                mismatched = [
+                    rid for rid in reference
+                    if warm_tokens[checked].get(rid) != reference[rid]
+                ]
+                assert not mismatched, f"{checked} output diverged for {mismatched}"
+                print(f"[serve] {checked} output token-identical across "
+                      f"{len(reference)} requests")
 
         # measured repeats are interleaved round-robin across modes so a
         # drift in background machine load biases every mode equally
@@ -153,6 +202,7 @@ def run(csv_writer=None, *, smoke: bool = False, repeats: int = 1,
                     "n_requests": n_requests,
                     "max_batch": 1 if mode == "serial" else MAX_BATCH,
                     "sync_interval": SYNC_INTERVAL if mode == "continuous_paged" else 1,
+                    "workers": FLEET_WORKERS if mode == "fleet" else 1,
                     "repeats": max(1, repeats),
                     "total_decode_tokens": total_tokens,
                     "wall_s": round(wall, 4),
@@ -177,6 +227,11 @@ def run(csv_writer=None, *, smoke: bool = False, repeats: int = 1,
         out["ttft_serial_over_continuous"] = round(
             by_mode["serial"]["ttft_mean_s"]
             / max(by_mode["continuous"]["ttft_mean_s"], 1e-9), 3,
+        )
+    if "fleet" in by_mode:
+        # informational: spawn + per-worker compile included; see docstring
+        out["speedup_fleet_vs_serial"] = round(
+            by_mode["fleet"]["tokens_per_s"] / by_mode["serial"]["tokens_per_s"], 3
         )
     if "continuous_paged" in by_mode:
         out["speedup_paged_vs_serial"] = round(

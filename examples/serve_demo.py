@@ -1,10 +1,17 @@
 """Continuous-batching serving demo with the request front door on HiCR
-channels: two producer instances stream requests of different prompt/decode
-lengths into an MPSC channel; one server instance drains them per scheduler
-tick, interleaves prefill/decode across slots, and **streams** replies over
-per-client SPSC channels (localsim fabric, 3 instances) — delta chunks every
-`STREAM_INTERVAL` decode ticks, terminal chunk on completion, so clients see
-tokens while their request is still decoding.
+channels, in two acts:
+
+1. **Single server, channel front door** — two producer instances stream
+   requests of different prompt/decode lengths into an MPSC channel; one
+   server instance drains them per scheduler tick, interleaves
+   prefill/decode across slots, and **streams** replies over per-client
+   SPSC channels (localsim fabric, 3 instances) — delta chunks every
+   `STREAM_INTERVAL` decode ticks, terminal chunk on completion.
+2. **Data-parallel fleet** — a root router instance spawns 2 worker
+   instances at runtime through `InstanceManager.create_instances` (paper
+   §3.1.1: template → create → message → terminate), load-balances the same
+   kind of workload across their schedulers on reported backpressure, and
+   merges the worker streams into one client-facing stream.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -110,3 +117,21 @@ print(f"server: {results[0]}")
 for rank in range(1, 1 + N_CLIENTS):
     for rid, (tokens, n_chunks) in sorted(results[rank].items()):
         print(f"  {rid}: {tokens} ({n_chunks} chunks)")
+
+# ---------------------------------------------------------------------------
+# Act 2: the data-parallel fleet (router + 2 runtime-created workers)
+# ---------------------------------------------------------------------------
+from repro.serve.router import run_fleet  # noqa: E402
+from repro.serve.workload import synthetic_requests  # noqa: E402
+
+N_WORKERS = 2
+fleet_reqs = synthetic_requests(cfg.vocab_size, 6, prompt_range=(3, 9),
+                                steps_range=(2, 10), seed=7, rid_prefix="fleet")
+print(f"\nfleet serve: router spawns {N_WORKERS} worker instances "
+      f"(InstanceManager.create_instances) and merges their streams")
+out = run_fleet(model, params, fleet_reqs, n_workers=N_WORKERS, max_batch=4,
+                max_len=32, stream_interval=STREAM_INTERVAL)
+for rid, res in sorted(out.results.items()):
+    print(f"  {rid}: {res['tokens']} ({res['finish_reason']})")
+print(f"fleet stats: per-worker settled {out.stats['per_worker_settled']}, "
+      f"{len(out.chunks)} merged chunks, restarted={out.stats['restarted']}")

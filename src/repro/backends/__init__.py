@@ -5,12 +5,16 @@ registry. The capability table mirrors the paper's Table 1:
 
   backend    | topology | instance | communication | memory | compute
   -----------+----------+----------+---------------+--------+--------
-  hostcpu    |    X     |          |      X        |   X    |   X      (HWLoc+Pthreads)
+  hostcpu    |    X     |    X*    |      X        |   X    |   X      (HWLoc+Pthreads)
   coroutine  |          |          |               |        |   X      (Boost)
   jaxdev     |    X     |          |      X        |   X    |   X      (ACL/OpenCL)
   localsim   |          |    X     |      X        |        |          (MPI/LPF)
   spmd       |          |    X     |      X        |        |   X      (XLA SPMD)
   tpu_spec   |    X     |          |               |        |          (spec-sheet)
+
+  X* — hostcpu's instance manager is the single-instance view: templates
+  are validated against the host topology, but elastic creation reports
+  UnsupportedOperationError (one OS process is one instance).
 """
 from repro.core.registry import register_backend
 
@@ -20,6 +24,7 @@ register_backend(
     "hostcpu",
     {
         "topology": hostcpu.HostTopologyManager,
+        "instance": hostcpu.HostInstanceManager,
         "memory": hostcpu.HostMemoryManager,
         "communication": hostcpu.HostCommunicationManager,
         "compute": hostcpu.HostComputeManager,

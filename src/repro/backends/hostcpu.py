@@ -20,24 +20,28 @@ import numpy as np
 
 from repro.core.definitions import (
     ComputeResourceKind,
+    HiCRError,
     InvalidMemcpyDirectionError,
     LifetimeError,
     MemcpyDirection,
     MemorySpaceKind,
     ProcessingUnitStatus,
+    UnsupportedOperationError,
 )
 from repro.core.events import Event, Future
 from repro.core.managers import (
     CommunicationManager,
     ComputeManager,
+    InstanceManager,
     MemoryManager,
     TopologyManager,
 )
-from repro.core.stateful import ExecutionState, LocalMemorySlot, ProcessingUnit
+from repro.core.stateful import ExecutionState, Instance, LocalMemorySlot, ProcessingUnit
 from repro.core.stateless import (
     ComputeResource,
     Device,
     ExecutionUnit,
+    InstanceTemplate,
     MemorySpace,
     Topology,
 )
@@ -138,6 +142,46 @@ class HostMemoryManager(MemoryManager):
     @property
     def live_slot_count(self) -> int:
         return len(self._live)
+
+
+class HostInstanceManager(InstanceManager):
+    """Single-instance view of the host process (paper §3.1.1).
+
+    The host process IS the one (root) instance. Elastic creation is a
+    *template-validated stub path*: ``create_instances`` checks the template
+    against the real host topology — so callers get exactly the same
+    template errors as on an elastic backend — and then reports the spawn
+    itself as unsupported, because one OS process cannot host a second HiCR
+    instance (no distributed-memory boundary to put between them)."""
+
+    backend_name = "hostcpu"
+
+    def __init__(self, topology: Topology | None = None):
+        self._topology = topology or HostTopologyManager().query_topology()
+        self._self = Instance("host-0", is_root=True, topology=self._topology)
+
+    def get_instances(self) -> Sequence[Instance]:
+        return (self._self,)
+
+    def get_current_instance(self) -> Instance:
+        return self._self
+
+    def create_instances(self, count: int, template: InstanceTemplate) -> Sequence[Instance]:
+        if count < 1:
+            raise ValueError("count must be >= 1")
+        # validation first: an unsatisfiable template is the caller's bug and
+        # must surface as such, not be masked by the capability error
+        if not self._topology.satisfies(template):
+            raise HiCRError("host topology cannot satisfy instance template")
+        raise UnsupportedOperationError(
+            "hostcpu is single-instance: template validated, but spawning "
+            "requires a multi-instance backend (localsim/spmd)"
+        )
+
+    def terminate_instance(self, instance: Instance) -> None:
+        raise UnsupportedOperationError(
+            "hostcpu cannot terminate the instance it runs inside"
+        )
 
 
 class HostCommunicationManager(CommunicationManager):
@@ -259,6 +303,7 @@ def make_managers(*, numa_domains: int = 1) -> Mapping[str, object]:
     topo = tm.query_topology()
     return {
         "topology": tm,
+        "instance": HostInstanceManager(topo),
         "memory": HostMemoryManager(topo),
         "communication": HostCommunicationManager(),
         "compute": HostComputeManager(),

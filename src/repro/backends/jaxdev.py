@@ -109,6 +109,8 @@ class JaxMemoryManager(MemoryManager):
 
     def allocate_local_memory_slot(self, space: MemorySpace, size_bytes: int) -> LocalMemorySlot:
         self._check_space(space)
+        if size_bytes <= 0:  # shared MemoryManager contract (conformance)
+            raise ValueError("allocation size must be positive")
         arr = jax.device_put(jnp.zeros((size_bytes,), dtype=jnp.uint8), _jax_device_for(space))
         return LocalMemorySlot(space, size_bytes, arr)
 

@@ -388,24 +388,40 @@ class LocalSimWorld:
             self._results[rank] = fn(self.managers_for(rank), rank)
         except BaseException as e:  # noqa: BLE001
             self._errors[rank] = e
+            # liveness signal for routers: a raised entry function ends the
+            # instance as FAILED (a clean return leaves status untouched so
+            # worlds can be re-launched over the same instances)
+            self.instances[rank].mark_failed()
 
     def launch(self, fn: Callable, *, timeout: float = 120.0) -> Dict[int, Any]:
+        launched = range(self._size)
+        # a re-launch starts these ranks fresh: results/errors a caller
+        # already handled (e.g. fleet workers whose failure was requeued)
+        # must not leak into this launch's verdict
+        for r in launched:
+            self._errors.pop(r, None)
+            self._results.pop(r, None)
         threads = [
             threading.Thread(target=self._run_rank, args=(fn, i), daemon=True, name=f"inst-{i}")
-            for i in range(self._size)
+            for i in launched
         ]
         # keep a SEPARATE list for elastic threads to append to, so an
         # instance calling create_instances() mid-launch cannot mutate the
-        # list we are iterating
-        self._threads = list(threads)
+        # list we are iterating; still-running threads from an earlier
+        # launch stay reachable for wait_instance()/join_elastic()
+        self._threads = [t for t in self._threads if t.is_alive()] + list(threads)
         for t in threads:
             t.start()
         for t in threads:
             t.join(timeout=timeout)
             if t.is_alive():
                 raise TimeoutError(f"instance thread {t.name} did not finish in {timeout}s")
-        if self._errors:
-            rank, err = sorted(self._errors.items())[0]
+        # only the ranks THIS launch started are fatal here: an elastic
+        # worker that failed and was handled (fleet requeue) is reported
+        # through join_elastic()/instance_errors() instead
+        own_errors = {r: e for r, e in self._errors.items() if r in launched}
+        if own_errors:
+            rank, err = sorted(own_errors.items())[0]
             raise InstanceFailedError(f"instance {rank} failed: {err!r}") from err
         return dict(self._results)
 
@@ -437,13 +453,29 @@ class LocalSimWorld:
             created.append(inst)
         return tuple(created)
 
-    def join_elastic(self, timeout: float = 120.0):
+    def wait_instance(self, rank: int, timeout: float = 30.0) -> bool:
+        """Join `rank`'s thread: True once the instance's entry function has
+        actually returned/raised. A router uses this after observing a
+        terminate/failure so requeue decisions never race the dying
+        instance's final channel pushes (deterministic handoff, no sleeps)."""
+        for t in self._threads:
+            if t.name == f"inst-{rank}":
+                t.join(timeout=timeout)
+                return not t.is_alive()
+        return True  # never started: nothing left to race against
+
+    def join_elastic(self, timeout: float = 120.0, *, raise_on_error: bool = True):
         for t in self._threads:
             t.join(timeout=timeout)
-        if self._errors:
+        if self._errors and raise_on_error:
             rank, err = sorted(self._errors.items())[0]
             raise InstanceFailedError(f"instance {rank} failed: {err!r}") from err
         return dict(self._results)
+
+    def instance_errors(self) -> Dict[int, BaseException]:
+        """Per-rank entry-function errors (e.g. workers that died mid-serve
+        and were handled by requeueing rather than re-raising)."""
+        return dict(self._errors)
 
     def shutdown(self):
         for i in range(self.size()):

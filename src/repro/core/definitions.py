@@ -80,6 +80,9 @@ class ProcessingUnitStatus(enum.Enum):
 class InstanceStatus(enum.Enum):
     RUNNING = "running"
     TERMINATED = "terminated"
+    #: The instance's entry function raised instead of returning — the
+    #: liveness signal a fleet router distinguishes from a clean terminate.
+    FAILED = "failed"
 
 
 class MemcpyDirection(enum.Enum):

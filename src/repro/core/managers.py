@@ -407,6 +407,11 @@ class InstanceManager(abc.ABC):
                 return inst
         raise NoRootInstanceError("no root instance found")
 
+    def live_instances(self) -> Sequence[Instance]:
+        """Instances still RUNNING — the set a router may assign work to.
+        Terminated and failed instances are excluded alike."""
+        return tuple(inst for inst in self.get_instances() if inst.is_live())
+
     def create_instance_template(self, **requirements) -> InstanceTemplate:
         return InstanceTemplate(**requirements)
 

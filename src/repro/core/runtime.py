@@ -106,6 +106,37 @@ class Runtime:
     def instance_manager(self):
         return self.managers.instance_manager
 
+    # -- instance lifecycle (paper §3.1.1) -----------------------------------
+    def _require_instance_manager(self):
+        im = self.managers.instance_manager
+        if im is None:
+            raise RuntimeAssemblyError(
+                f"backend {self.backend!r} has no instance role; override it "
+                "from a backend that does (e.g. hostcpu for the validated "
+                "single-instance view, localsim for elastic instances)"
+            )
+        return im
+
+    def instances(self):
+        """All launch-time + runtime-created instances (paper §3.1.1)."""
+        return self._require_instance_manager().get_instances()
+
+    def live_instances(self):
+        return self._require_instance_manager().live_instances()
+
+    def create_instances(self, count: int, template=None, **requirements):
+        """Create `count` instances from `template` (or from `requirements`
+        via `create_instance_template`) — the template → create step of the
+        paper's instance operations. Backends without elastic creation raise
+        `UnsupportedOperationError` after validating the template."""
+        im = self._require_instance_manager()
+        if template is None:
+            template = im.create_instance_template(**requirements)
+        return im.create_instances(count, template)
+
+    def terminate_instance(self, instance) -> None:
+        self._require_instance_manager().terminate_instance(instance)
+
     def query_topology(self) -> Topology:
         if self._topology is None:
             if not self.managers.topology_managers:

@@ -196,8 +196,19 @@ class Instance:
         tie-breaking mechanism, nothing more (paper §3.1.1)."""
         return self._is_root
 
+    def is_live(self) -> bool:
+        """Liveness as a manager/router sees it: RUNNING and nothing else.
+        Both a clean terminate and an entry-function failure end liveness."""
+        return self.status == InstanceStatus.RUNNING
+
     def terminate(self):
         self.status = InstanceStatus.TERMINATED
+
+    def mark_failed(self):
+        """Record that the instance's entry function raised. A terminate
+        requested earlier (cooperative kill) keeps the stronger FAILED
+        status so routers can tell crash from drain."""
+        self.status = InstanceStatus.FAILED
 
     def __repr__(self):
         root = ", root" if self._is_root else ""

@@ -18,14 +18,25 @@ Built exclusively on the HiCR core API: slot allocation (MemoryManager),
 collective slot exchange + one-sided memcpy + fence (CommunicationManager).
 Counter updates are single-writer by construction: the producer owns the
 tail counter, the consumer owns the head counter.
+
+Two construction paths:
+* **collective** (the default constructors) — both ends join the tag's
+  collective slot exchange, as in the paper;
+* **direct** (`connect_direct`) — the consumer registers its ring slots
+  directly (the DataObject publish path) and the producer resolves them by
+  (tag, key) with a bounded rendezvous retry. No collective means a channel
+  can be wired to an instance created *at runtime* (paper §3.1.1 elastic
+  instances — the serving fleet's router/worker links), and a dead end never
+  strands the other participants in a barrier.
 """
 from __future__ import annotations
 
 import struct
+import time
 from collections import deque
 from typing import Optional, Sequence
 
-from repro.core.definitions import HiCRError
+from repro.core.definitions import FutureTimeoutError, HiCRError
 from repro.core.events import Event, Future
 from repro.core.managers import CommunicationManager, MemoryManager
 
@@ -113,6 +124,24 @@ class _EndBase:
         self._space = space
 
 
+def _poll_direct_handles(comm, tag: int, keys: Sequence[int], timeout: float):
+    """Rendezvous with a directly-registered channel end: retry the handle
+    lookup until the owning end has registered all `keys` under `tag`.
+    Registration order on the owner side is irrelevant — the connect only
+    proceeds once every key resolves."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            return {k: comm.get_global_slot_handle(tag, k) for k in keys}
+        except HiCRError:
+            if time.monotonic() >= deadline:
+                raise FutureTimeoutError(
+                    f"channel tag {tag}: peer did not register keys {tuple(keys)} "
+                    f"within {timeout}s"
+                )
+            time.sleep(0.0005)
+
+
 class SPSCProducer(_EndBase):
     """Producer end. Construction participates in the collective exchange."""
 
@@ -126,6 +155,32 @@ class SPSCProducer(_EndBase):
         self._cached_head = 0
         #: submission-ordered pending async pushes (see _push_event)
         self._push_queue: deque = deque()
+
+    @classmethod
+    def connect_direct(
+        cls, comm, mem, tag: int, capacity: int, msg_size: int,
+        *, key_offset: int = 0, timeout: float = 30.0,
+    ) -> "SPSCProducer":
+        """Non-collective construction: resolve the consumer's directly
+        registered ring slots by (tag, key) instead of joining a collective
+        exchange. This is how an *elastically created* instance (paper
+        §3.1.1) attaches to a channel — a runtime-spawned worker cannot
+        retroactively join the collectives the launch-time world already
+        ran. Blocks (bounded by `timeout`) until the consumer end exists."""
+        self = object.__new__(cls)
+        _EndBase.__init__(self, comm, mem, tag, capacity, msg_size)
+        handles = _poll_direct_handles(
+            comm, tag,
+            (KEY_PAYLOAD + key_offset, KEY_TAIL + key_offset, KEY_HEAD + key_offset),
+            timeout,
+        )
+        self._payload = handles[KEY_PAYLOAD + key_offset]
+        self._tail_slot = handles[KEY_TAIL + key_offset]
+        self._head_slot = handles[KEY_HEAD + key_offset]
+        self._tail = 0
+        self._cached_head = 0
+        self._push_queue = deque()
+        return self
 
     def _full(self) -> bool:
         if self._tail - self._cached_head < self.capacity:
@@ -190,6 +245,26 @@ class SPSCConsumer(_EndBase):
         self._head_slot = gslots[KEY_HEAD + key_offset]
         self._tail_slot = gslots[KEY_TAIL + key_offset]
         self._head = 0
+
+    @classmethod
+    def connect_direct(
+        cls, comm, mem, tag: int, capacity: int, msg_size: int, *, key_offset: int = 0,
+    ) -> "SPSCConsumer":
+        """Non-collective construction: allocate the ring buffers and make
+        them remotely reachable via direct registration (the DataObject
+        publish path) rather than a collective exchange — so a channel end
+        can come up at any time, including on an elastically created
+        instance. The producer attaches with `SPSCProducer.connect_direct`."""
+        self = object.__new__(cls)
+        _EndBase.__init__(self, comm, mem, tag, capacity, msg_size)
+        self._payload_local = mem.allocate_local_memory_slot(self._space, capacity * msg_size)
+        self._tail_local = mem.allocate_local_memory_slot(self._space, _CTR.size)
+        self._head_local = mem.allocate_local_memory_slot(self._space, _CTR.size)
+        comm.register_global_slot(tag, KEY_PAYLOAD + key_offset, self._payload_local)
+        self._tail_slot = comm.register_global_slot(tag, KEY_TAIL + key_offset, self._tail_local)
+        self._head_slot = comm.register_global_slot(tag, KEY_HEAD + key_offset, self._head_local)
+        self._head = 0
+        return self
 
     def depth(self) -> int:
         tail = _CTR.unpack(bytes(self._tail_local.handle[: _CTR.size]))[0]

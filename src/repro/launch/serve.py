@@ -1,15 +1,21 @@
 """Serving driver: load (or init) weights and serve a synthetic workload
-through either the serial engine or the continuous-batching scheduler, on a
-registry-built Runtime (no concrete-backend imports here).
+through the serial engine, the continuous-batching scheduler, or a
+data-parallel worker fleet, on a registry-built Runtime (no concrete-backend
+imports here; fleet mode assembles its localsim world inside serve/router).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --mode continuous --max-batch 8 --requests 16 [--backend jaxdev] \
         [--kv-mode paged --page-size 16 --sync-interval 8 --pool-pages N]
 
+    # data-parallel fleet: router + N worker instances (paper §3.1.1)
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+        --mode fleet --workers 2 --max-batch 4 --requests 16
+
 ``--kv-mode paged`` serves from a paged KV-cache pool (block-pool tensors
 behind a scheduler-owned page table, admission bounded by free pages) with
 the device-resident decode loop (`--sync-interval` fused ticks per host
-sync). ``--kv-mode dense`` is the per-slot dense-cache baseline.
+sync). ``--kv-mode dense`` is the per-slot dense-cache baseline. Both apply
+per worker in fleet mode.
 
 The channel-driven multi-instance front door (2 producers + 1 server over
 the localsim fabric) is wired in examples/serve_demo.py.
@@ -36,7 +42,12 @@ def main(argv=None):
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--backend", default="jaxdev", help="registry backend for the Runtime")
-    ap.add_argument("--mode", choices=("serial", "continuous"), default="continuous")
+    ap.add_argument("--mode", choices=("serial", "continuous", "fleet"), default="continuous")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="fleet mode: worker instances spawned by the router")
+    ap.add_argument("--msg-size", type=int, default=None,
+                    help="fleet mode: channel message size in bytes (default: "
+                    "sized to fit the workload's longest possible request)")
     ap.add_argument("--kv-mode", choices=("dense", "paged"), default="dense",
                     help="continuous mode: dense per-slot caches, or the paged "
                     "KV pool + device-resident decode loop")
@@ -73,6 +84,33 @@ def main(argv=None):
     total_tokens = sum(r.max_new_tokens for r in requests)
 
     t0 = time.time()
+    if args.mode == "fleet":
+        from repro.serve.router import run_fleet
+
+        # default msg_size: room for the longest admissible request wire
+        # (~6 bytes per prompt token + JSON framing), rounded up
+        msg_size = args.msg_size or max(512, 128 + 8 * max_len)
+        out = run_fleet(
+            model, params, requests, n_workers=args.workers,
+            max_batch=args.max_batch, max_len=max_len, msg_size=msg_size,
+            kv_mode=args.kv_mode, page_size=args.page_size,
+            pool_pages=args.pool_pages, sync_interval=args.sync_interval,
+            worker_backend=args.backend,
+        )
+        for r in requests:
+            res = out.results[r.rid]
+            if "error" in res:
+                print(f"{r.rid}: ERROR {res['error']}")
+            else:
+                print(f"{r.rid}: {res['tokens'][:8]}... ({res['finish_reason']})")
+        stats = out.stats
+        print(f"fleet: {stats['workers_spawned']} workers, per-worker settled "
+              f"{stats['per_worker_settled']}, restarted {stats['restarted']}")
+        dt = time.time() - t0
+        print(f"served {len(requests)} requests / {total_tokens} tokens in {dt:.2f}s "
+              f"({total_tokens / dt:.1f} tok/s, mode=fleet, workers={args.workers}, "
+              f"backend={args.backend})")
+        return
     # context-managed Runtime: the default processing unit is finalized on
     # exit, so repeated invocations never leak backend worker threads
     with Runtime(args.backend) as runtime:

@@ -1,5 +1,6 @@
 """Serving substrate over the model zoo: serial engine (`engine`), batched
 decode core (`batching`: dense SlotDecoder + paged device-resident
 PagedSlotDecoder), KV page pool (`kv_pool`), continuous-batching scheduler
-(`scheduler`), and the HiCR-channel front door (`server`)."""
-from . import batching, engine, kv_pool, scheduler, server, workload  # noqa: F401
+(`scheduler`), the HiCR-channel front door (`server`), and the
+multi-instance router/worker fleet over InstanceManager (`router`)."""
+from . import batching, engine, kv_pool, router, scheduler, server, workload  # noqa: F401

@@ -62,11 +62,14 @@ class FinishedRequest:
 class SchedulerProgress:
     """Snapshot for the streaming front door: tokens emitted so far per
     *active* request (copies), plus the KV-pool occupancy in paged mode
-    (None/None in dense mode — there is no shared pool to meter)."""
+    (None/None in dense mode — there is no shared pool to meter).
+    `free_slots` is the admission headroom a fleet router load-balances on
+    (reported upstream over the control channel)."""
 
     requests: Dict[str, List[int]]
     pages_free: Optional[int] = None
     pages_used: Optional[int] = None
+    free_slots: int = 0
 
 
 @dataclasses.dataclass
@@ -148,9 +151,10 @@ class ContinuousBatchingScheduler:
         if self.kv_mode == "paged":
             kv = self.decoder.kv
             return SchedulerProgress(
-                requests=requests, pages_free=kv.pages_free, pages_used=kv.pages_used
+                requests=requests, pages_free=kv.pages_free,
+                pages_used=kv.pages_used, free_slots=self.free_slots,
             )
-        return SchedulerProgress(requests=requests)
+        return SchedulerProgress(requests=requests, free_slots=self.free_slots)
 
     # -- admission (any time, including mid-decode) -------------------------
     def try_admit(self, request: Request) -> bool:

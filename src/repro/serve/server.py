@@ -73,6 +73,13 @@ class ChannelServer:
         self.stream_interval = stream_interval
         #: tokens already streamed per active request id
         self._streamed: dict[str, int] = {}
+        #: decoded-but-unadmitted requests (ingested while the table was full)
+        self._backlog: "deque[Request]" = deque()
+        #: requests settled over this server's lifetime (replied or rejected)
+        self._settled = 0
+        self._ticks_since_stream = 0
+        #: the armed arrival future (one outstanding pop at a time)
+        self._pop_fut = None
 
     # -- wire codecs ---------------------------------------------------------
     @staticmethod
@@ -202,55 +209,84 @@ class ChannelServer:
         return pop_async() if pop_async is not None else pop_future(self.consumer)
 
     # -- serve loop -----------------------------------------------------------
+    @property
+    def settled(self) -> int:
+        """Requests settled (replied or rejected) over this server's life."""
+        return self._settled
+
+    @property
+    def idle(self) -> bool:
+        """No backlogged and no actively decoding requests."""
+        return not self._backlog and self.scheduler.active_count == 0
+
+    @property
+    def backlog_size(self) -> int:
+        """Ingested-but-unadmitted requests (admission queue pressure)."""
+        return len(self._backlog)
+
+    def _arm(self):
+        if self._pop_fut is None:
+            self._pop_fut = self._pop_async()
+        return self._pop_fut
+
+    def wait_for_arrival(self, timeout: float) -> bool:
+        """Park on the armed arrival future: True the instant a message is
+        available (or one was already ingested), False on timeout. The
+        fleet worker's idle strategy — a bounded park instead of a spin, so
+        a terminate is still observed promptly."""
+        return self._arm().wait(timeout)
+
+    def tick(self) -> List[FinishedRequest]:
+        """One serve-loop iteration: ingest completed arrivals, admit into
+        free slots, advance decode one scheduler step, stream deltas, reply
+        for completions. Returns the requests that finished decoding this
+        tick (error-settled requests bump `settled` but are not listed)."""
+        backlog = self._backlog
+        pop_fut = self._arm()
+        # ingest every request whose arrival future completed, up to one
+        # batch ahead (each completed pop re-arms the next one)
+        # backlog-space check FIRST: done() polls the ring and would
+        # consume a message this loop has no room to keep
+        while len(backlog) < self.scheduler.max_batch and pop_fut.done():
+            self._settled += self._ingest(pop_fut.result(), backlog)
+            self._pop_fut = pop_fut = self._pop_async()
+        # admit into every free slot; the rest stays backlogged
+        while backlog:
+            try:
+                if not self.scheduler.try_admit(backlog[0]):
+                    break  # table full; keep backlogged
+                backlog.popleft()
+            except ValueError as e:  # unservable (too long, dup id, ...)
+                bad = backlog.popleft()
+                self.reply.push(self.encode_error(bad.rid, str(e)))
+                self._settled += 1
+        finished = self.scheduler.step()
+        if self.stream_interval is not None and self.scheduler.active_count:
+            self._ticks_since_stream += 1
+            if self._ticks_since_stream >= self.stream_interval:
+                self._ticks_since_stream = 0
+                self._stream_deltas()
+        for fin in finished:
+            self._reply_finished(fin)
+            self._settled += 1
+        return finished
+
     def serve(self, n_requests: int) -> int:
-        """Serve until `n_requests` requests are settled (replied, or
-        rejected with an error reply). Returns the number of scheduler
+        """Serve until `n_requests` (further) requests are settled (replied,
+        or rejected with an error reply). Returns the number of scheduler
         ticks spent."""
-        backlog: deque[Request] = deque()
-        settled = 0
-        ticks_since_stream = 0
-        pop_fut = self._pop_async()
-        while settled < n_requests:
-            # ingest every request whose arrival future completed, up to one
-            # batch ahead (each completed pop re-arms the next one)
-            # backlog-space check FIRST: done() polls the ring and would
-            # consume a message this loop has no room to keep
-            while len(backlog) < self.scheduler.max_batch and pop_fut.done():
-                settled += self._ingest(pop_fut.result(), backlog)
-                pop_fut = self._pop_async()
-            # admit into every free slot; the rest stays backlogged
-            while backlog:
-                try:
-                    if not self.scheduler.try_admit(backlog[0]):
-                        break  # table full; keep backlogged
-                    backlog.popleft()
-                except ValueError as e:  # unservable (too long, dup id, ...)
-                    bad = backlog.popleft()
-                    self.reply.push(self.encode_error(bad.rid, str(e)))
-                    settled += 1
-            finished = self.scheduler.step()
-            if self.stream_interval is not None and self.scheduler.active_count:
-                ticks_since_stream += 1
-                if ticks_since_stream >= self.stream_interval:
-                    ticks_since_stream = 0
-                    self._stream_deltas()
-            for fin in finished:
-                self._reply_finished(fin)
-                settled += 1
-            if (
-                settled < n_requests
-                and not finished
-                and not backlog
-                and self.scheduler.active_count == 0
-            ):
+        target = self._settled + n_requests
+        while self._settled < target:
+            finished = self.tick()
+            if self._settled < target and not finished and self.idle:
                 # fully idle: park on the arrival future instead of spinning
                 # (the old blocking-pop path crashed decoding the timeout
                 # sentinel). The Future resolves the instant a message
                 # lands; a False return therefore means idle_timeout passed
                 # with no traffic at all — surface that instead of hanging.
-                if not pop_fut.wait(self.idle_timeout):
+                if not self.wait_for_arrival(self.idle_timeout):
                     raise FutureTimeoutError(
                         f"serve(): no request arrived within {self.idle_timeout}s "
-                        f"while {n_requests - settled} request(s) still awaited"
+                        f"while {target - self._settled} request(s) still awaited"
                     )
         return self.scheduler.ticks

@@ -1,37 +1,192 @@
 """Fallback shims for environments without `hypothesis`.
 
 Test modules import hypothesis through a guarded import; when the package is
-missing, these stand-ins turn each property-based test into a skip while
-leaving every non-hypothesis test in the module runnable — a plain
-`pytest.importorskip` at module scope would throw those away too.
+missing, these stand-ins make each property-based test ACTUALLY RUN: every
+strategy is backed by a deterministic seeded RNG (seeded from the test's
+qualified name, so failures reproduce run-to-run) and `@given` drives the
+test body over a bounded number of drawn examples. This is deliberately a
+miniature of hypothesis — no shrinking, no database, no adaptive search —
+but properties are exercised instead of skipped, which is what a tier-1
+suite needs from them.
+
+The example count is `min(settings(max_examples=...), _MAX_EXAMPLES)`:
+hypothesis-grade example counts are tuned for a fuzzer with shrinking; a
+seeded sweep gets most of the value from the first handful of draws and
+must not balloon the suite's runtime.
 """
-import pytest
+import functools
+import inspect
+import random
+import zlib
+
+_MAX_EXAMPLES = 10  # cap per property under the fallback (see docstring)
+_DEFAULT_EXAMPLES = 10
 
 
-class _AnyStrategy:
-    """Stands in for `hypothesis.strategies`: any strategy-constructor call
-    (st.integers(...), st.floats(...).filter(...)) returns another stub so
-    decoration-time expressions evaluate without hypothesis."""
+class Strategy:
+    """Minimal strategy protocol: `example(rng)` draws one value."""
 
-    def __call__(self, *args, **kwargs):
-        return _AnyStrategy()
+    def example(self, rng: random.Random):
+        raise NotImplementedError
 
-    def __getattr__(self, name):
-        return _AnyStrategy()
+    def map(self, fn):
+        return _Mapped(self, fn)
 
-
-st = _AnyStrategy()
+    def filter(self, predicate):
+        return _Filtered(self, predicate)
 
 
-def given(*_args, **_kwargs):
+class _Mapped(Strategy):
+    def __init__(self, base, fn):
+        self._base, self._fn = base, fn
+
+    def example(self, rng):
+        return self._fn(self._base.example(rng))
+
+
+class _Filtered(Strategy):
+    def __init__(self, base, predicate):
+        self._base, self._predicate = base, predicate
+
+    def example(self, rng):
+        for _ in range(1000):
+            value = self._base.example(rng)
+            if self._predicate(value):
+                return value
+        raise ValueError("filter predicate rejected 1000 consecutive draws")
+
+
+class _Integers(Strategy):
+    def __init__(self, lo, hi):
+        self._lo, self._hi = lo, hi
+
+    def example(self, rng):
+        return rng.randint(self._lo, self._hi)  # inclusive, like hypothesis
+
+
+class _Floats(Strategy):
+    def __init__(self, lo, hi):
+        self._lo, self._hi = lo, hi
+
+    def example(self, rng):
+        return rng.uniform(self._lo, self._hi)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, options):
+        self._options = list(options)
+
+    def example(self, rng):
+        return rng.choice(self._options)
+
+
+class _Booleans(Strategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self._value = value
+
+    def example(self, rng):
+        return self._value
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self._elements = elements
+        self._min, self._max = min_size, max_size if max_size is not None else min_size + 10
+
+    def example(self, rng):
+        n = rng.randint(self._min, self._max)
+        return [self._elements.example(rng) for _ in range(n)]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *parts):
+        self._parts = parts
+
+    def example(self, rng):
+        return tuple(p.example(rng) for p in self._parts)
+
+
+class _StrategiesNamespace:
+    """Stands in for `hypothesis.strategies`."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2**32):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kwargs):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kwargs):
+        return _Lists(elements, min_size=min_size, max_size=max_size)
+
+    @staticmethod
+    def tuples(*parts):
+        return _Tuples(*parts)
+
+
+st = _StrategiesNamespace()
+
+
+def given(*_args, **strategies):
+    """Drive the wrapped test over seeded drawn examples (kwargs style only,
+    which is how every property test in this repo calls it)."""
+    if _args:
+        raise TypeError("fallback @given supports keyword strategies only")
+
     def decorate(fn):
-        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            declared = getattr(wrapper, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            n = min(declared, _MAX_EXAMPLES)
+            # deterministic per-test seed: failures reproduce run-to-run
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = {name: s.example(rng) for name, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 - annotate and re-raise
+                    raise AssertionError(
+                        f"property falsified on example {i + 1}/{n}: {drawn!r}"
+                    ) from e
+
+        # pytest resolves fixtures from the visible signature: hide the
+        # strategy-filled parameters (and the __wrapped__ shortcut back to
+        # the original function) so only real fixtures remain
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items() if name not in strategies]
+        )
+        del wrapper.__wrapped__
+        return wrapper
 
     return decorate
 
 
-def settings(*_args, **_kwargs):
+def settings(max_examples=None, deadline=None, **_kwargs):
+    """Record the declared example budget; `given`'s wrapper caps it."""
+
     def decorate(fn):
+        if max_examples is not None:
+            fn._fallback_max_examples = max_examples
         return fn
 
     return decorate

@@ -181,7 +181,9 @@ class TestRegistry:
     def test_capability_matrix_expected_rows(self):
         table = capability_table()
         assert table["hostcpu"] == {
-            "topology": True, "instance": False, "communication": True,
+            # instance: the single-instance view with template validation
+            # (creation itself raises UnsupportedOperationError)
+            "topology": True, "instance": True, "communication": True,
             "memory": True, "compute": True,
         }
         assert table["coroutine"]["compute"] and not table["coroutine"]["topology"]
@@ -245,3 +247,127 @@ class TestModelErrorHierarchy:
         with pytest.raises(InstanceFailedError, match="instance 0 failed"):
             w.launch(lambda mgrs, rank: 1 // 0)
         w.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Instance liveness (paper §3.1.1) — the signal fleet routers act on
+# ---------------------------------------------------------------------------
+
+
+class TestInstanceLiveness:
+    def test_running_instance_is_live(self):
+        inst = Instance("i-0")
+        assert inst.is_live()
+
+    def test_terminate_ends_liveness(self):
+        inst = Instance("i-0")
+        inst.terminate()
+        assert not inst.is_live()
+
+    def test_failure_ends_liveness_and_is_distinguishable(self):
+        from repro.core.definitions import InstanceStatus
+
+        inst = Instance("i-0")
+        inst.mark_failed()
+        assert not inst.is_live()
+        assert inst.status == InstanceStatus.FAILED
+
+    def test_failed_entry_marks_instance_failed(self):
+        from repro.backends.localsim import LocalSimWorld
+        from repro.core import InstanceFailedError
+        from repro.core.definitions import InstanceStatus
+
+        w = LocalSimWorld(2)
+
+        def prog(mgrs, rank):
+            if rank == 1:
+                raise ValueError("worker crash")
+            return "ok"
+
+        with pytest.raises(InstanceFailedError):
+            w.launch(prog)
+        assert w.instances[1].status == InstanceStatus.FAILED
+        assert w.instances[0].is_live()  # clean return: status untouched
+        w.shutdown()
+
+    def test_live_instances_excludes_dead(self):
+        from repro.core.managers import InstanceManager
+
+        insts = [Instance("i-0", is_root=True), Instance("i-1"), Instance("i-2")]
+
+        class Mgr(InstanceManager):
+            def get_instances(self):
+                return tuple(insts)
+
+            def get_current_instance(self):
+                return insts[0]
+
+        insts[1].terminate()
+        insts[2].mark_failed()
+        assert [i.instance_id for i in Mgr().live_instances()] == ["i-0"]
+
+
+# ---------------------------------------------------------------------------
+# MemorySlotPool allocator properties (seeded; run with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback: seeded-random strategies, tests still run
+    from _hypothesis_compat import given, settings, st
+
+
+class TestMemorySlotPoolProperties:
+    """Random reserve/draw/free schedules never violate the pool's
+    accounting invariants (§3.1.3 allocate-once, place-many)."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n_blocks=st.sampled_from([1, 2, 5, 16]),
+        seed=st.integers(0, 2**16),
+        steps=st.integers(1, 60),
+    )
+    def test_accounting_invariants_hold(self, n_blocks, seed, steps):
+        import random as _random
+
+        from repro.core.managers import MemorySlotPool
+
+        rng = _random.Random(seed)
+        pool = MemorySlotPool(64, n_blocks)
+        reserved = 0          # our mirror of outstanding reservations
+        held: list = []       # drawn blocks we own
+        for _ in range(steps):
+            op = rng.choice(("reserve", "draw", "free"))
+            if op == "reserve":
+                want = rng.randint(1, n_blocks)
+                ok = pool.reserve(want)
+                assert ok == (want <= n_blocks - len(held) - reserved)
+                if ok:
+                    reserved += want
+            elif op == "draw" and reserved:
+                take = rng.randint(1, reserved)
+                drawn = pool.draw(take)
+                assert len(drawn) == take
+                assert len(set(drawn)) == take  # no double-hand-out
+                assert not (set(drawn) & set(held))
+                held.extend(drawn)
+                reserved -= take
+            elif op == "free" and held:
+                give = rng.randint(1, len(held))
+                back, held = held[:give], held[give:]
+                pool.free(back)
+            # the invariants, every step:
+            assert pool.blocks_used == len(held)
+            assert pool.blocks_free == n_blocks - len(held)
+            assert pool.blocks_available == n_blocks - len(held) - reserved
+            assert pool.capacity == n_blocks
+
+    @settings(max_examples=10, deadline=None)
+    @given(n_blocks=st.sampled_from([2, 8]), over=st.integers(1, 4))
+    def test_draw_beyond_reservation_rejected(self, n_blocks, over):
+        from repro.core.managers import MemorySlotPool
+
+        pool = MemorySlotPool(64, n_blocks)
+        assert pool.reserve(1)
+        with pytest.raises(ValueError, match="exceeds reservation"):
+            pool.draw(1 + over)

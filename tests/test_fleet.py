@@ -1,0 +1,268 @@
+"""Multi-instance serving fleet (serve/router.py) over localsim instance
+operations: router spawns workers through `InstanceManager.create_instances`,
+balances admissions on reported backpressure, merges worker streams, and
+survives worker deaths by requeueing onto survivors.
+
+Fault-injection discipline: kills are triggered from the router's
+`on_forward` hook when OBSERVED STATE (forwarded-token counts) reaches the
+scenario's condition — never from a timer — so every scenario is
+deterministic with respect to what the client stream had seen, and the
+token-identity assertions hold on every run.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serve.router import FleetConfig, run_fleet
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+from repro.serve.workload import synthetic_requests
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    cfg = get_config("gemma3-1b", reduced=True)
+    model = build(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _workload(cfg, n, *, steps=(6, 14), prompts=(3, 9), seed=0):
+    return synthetic_requests(
+        cfg.vocab_size, n, prompt_range=prompts, steps_range=steps, seed=seed
+    )
+
+
+def _reference_tokens(model, params, requests, *, max_len):
+    """Single-instance continuous-batching reference for the same workload."""
+    sched = ContinuousBatchingScheduler(model, params, max_batch=4, max_len=max_len)
+    return {rid: fin.tokens for rid, fin in sched.serve(list(requests)).items()}
+
+
+class TestFleetServe:
+    def test_two_workers_token_identical_to_single_instance(self, bundle):
+        """Acceptance: fleet mode with 2 localsim workers produces
+        token-identical outputs to the single-instance continuous path for
+        the shared synthetic workload."""
+        cfg, model, params = bundle
+        reqs = _workload(cfg, 8)
+        ref = _reference_tokens(model, params, reqs, max_len=32)
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=2,
+                        max_len=32, launch_timeout=420)
+        assert set(out.results) == set(ref)
+        for rid, expect in ref.items():
+            assert out.results[rid]["tokens"] == expect, rid
+            assert out.results[rid]["finish_reason"] == "length"
+            assert out.results[rid]["restarted"] is False
+        assert out.stats["workers_spawned"] == 2
+        assert out.stats["worker_errors"] == {}
+
+    def test_admissions_spread_across_workers(self, bundle):
+        """Backpressure-driven balancing: with more requests than one
+        worker's slots, every worker ends up serving some of them."""
+        cfg, model, params = bundle
+        reqs = _workload(cfg, 8, seed=1)
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=2,
+                        max_len=32, launch_timeout=420)
+        settled = out.stats["per_worker_settled"]
+        assert sum(settled.values()) == len(reqs)
+        assert all(n >= 1 for n in settled.values()), settled
+
+    def test_streamed_chunks_reassemble_in_order(self, bundle):
+        """The merged client stream is a valid streaming protocol: per-id
+        chunks arrive in order, exactly one terminal chunk per id, deltas
+        concatenate to the full token list."""
+        cfg, model, params = bundle
+        reqs = _workload(cfg, 6, steps=(8, 14), seed=2)
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=2,
+                        max_len=32, stream_interval=1, launch_timeout=420)
+        terminal = set()
+        counts = {}
+        for chunk in out.chunks:
+            rid = chunk["id"]
+            assert rid not in terminal, "chunk after terminal chunk"
+            counts[rid] = counts.get(rid, 0) + 1
+            if chunk["done"]:
+                terminal.add(rid)
+        assert terminal == {r.rid for r in reqs}
+        # long requests streamed (several chunks), not one-shot replies
+        assert max(counts.values()) >= 3
+
+    def test_fleet_paged_kv_mode(self, bundle):
+        """Fleet × paged KV orthogonality: workers serving from the paged
+        pool produce the same tokens as the single-instance dense path."""
+        cfg, model, params = bundle
+        reqs = _workload(cfg, 4, steps=(6, 10), seed=3)
+        ref = _reference_tokens(model, params, reqs, max_len=32)
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=2,
+                        max_len=32, kv_mode="paged", page_size=16,
+                        sync_interval=2, launch_timeout=420)
+        for rid, expect in ref.items():
+            assert out.results[rid]["tokens"] == expect, rid
+
+    def test_duplicate_rids_rejected_up_front(self, bundle):
+        cfg, model, params = bundle
+        twins = [Request(rid="same", prompt=[1, 2, 3], max_new_tokens=2),
+                 Request(rid="same", prompt=[4, 5, 6], max_new_tokens=2)]
+        with pytest.raises(Exception, match="already in flight"):
+            run_fleet(model, params, twins, n_workers=1, max_batch=2,
+                      max_len=32, launch_timeout=240)
+
+    def test_oversize_wire_request_settles_without_killing_fleet(self, bundle):
+        """A request whose wire encoding exceeds the fleet msg_size gets an
+        error reply at the router (it never reaches a worker); the rest of
+        the workload completes normally."""
+        cfg, model, params = bundle
+        good = _workload(cfg, 2, steps=(4, 6), seed=10)
+        fat = Request(rid="fat-wire", prompt=[100] * 25, max_new_tokens=2)
+        out = run_fleet(model, params, list(good) + [fat], n_workers=2,
+                        max_batch=2, max_len=32, msg_size=128,
+                        launch_timeout=420)
+        assert "exceeds fleet msg_size" in out.results["fat-wire"]["error"]
+        for r in good:
+            assert out.results[r.rid]["finish_reason"] == "length"
+        assert out.stats["worker_errors"] == {}
+
+    def test_unservable_request_settles_with_error_reply(self, bundle):
+        """A request exceeding the workers' max_len settles as an error
+        reply through the merged stream; the rest of the workload is
+        unaffected."""
+        cfg, model, params = bundle
+        good = _workload(cfg, 2, steps=(4, 6), seed=4)
+        bad = Request(rid="too-big", prompt=[1] * 30, max_new_tokens=30)
+        out = run_fleet(model, params, list(good) + [bad], n_workers=2,
+                        max_batch=2, max_len=32, launch_timeout=420)
+        assert "cache positions" in out.results["too-big"]["error"]
+        for r in good:
+            assert out.results[r.rid]["finish_reason"] == "length"
+
+
+class TestFaultInjection:
+    """Worker-kill scenarios. All triggers are state-based (see module
+    docstring) — no sleeps-as-synchronization anywhere."""
+
+    def test_worker_kill_mid_stream_requeues_token_identical(self, bundle):
+        """Acceptance: kill a worker mid-stream; its in-flight requests are
+        requeued onto the survivor, complete with token-identical output,
+        and the terminal chunk carries the `restarted` flag."""
+        cfg, model, params = bundle
+        # long decodes ensure the kill lands far from any completion
+        reqs = _workload(cfg, 5, steps=(16, 25), prompts=(3, 7), seed=5)
+        ref = _reference_tokens(model, params, reqs, max_len=48)
+        state = {"killed_worker": None, "victim": None}
+
+        def kill_mid_stream(router, rid, chunk):
+            if state["killed_worker"] is not None or "error" in chunk:
+                return
+            fl = router._flights.get(rid)
+            # trigger: a request OBSERVED at >= 2 forwarded tokens, mid-stream
+            if fl and fl.worker is not None and fl.forwarded >= 2 and not chunk["done"]:
+                state["killed_worker"] = fl.worker
+                state["victim"] = rid
+                router.kill_worker(fl.worker)
+
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=2,
+                        max_len=48, stream_interval=1,
+                        on_forward=kill_mid_stream, launch_timeout=420)
+        assert state["killed_worker"] is not None, "kill never triggered"
+        assert out.stats["workers_killed"] == 1
+        restarted = set(out.stats["restarted"])
+        assert state["victim"] in restarted
+        # every request completed with the exact single-instance tokens,
+        # restarted or not — the dedupe high-water mark hides the handoff
+        for rid, expect in ref.items():
+            assert out.results[rid]["tokens"] == expect, rid
+            assert out.results[rid]["restarted"] == (rid in restarted)
+        # the terminal chunk itself carried the flag
+        terminal = {c["id"]: c for c in out.chunks if c.get("done")}
+        assert terminal[state["victim"]].get("restarted") is True
+        # the killed worker abandoned in-flight work: its failure is recorded
+        assert any("terminated with" in e
+                   for e in out.stats["worker_errors"].values())
+
+    def test_restarted_stream_has_no_duplicate_or_missing_tokens(self, bundle):
+        """Protocol-level check of the same scenario: concatenating the
+        victim's deltas in arrival order across the handoff yields the
+        reference chain exactly once (no replayed prefix, no gap)."""
+        cfg, model, params = bundle
+        reqs = _workload(cfg, 4, steps=(18, 22), prompts=(3, 6), seed=6)
+        ref = _reference_tokens(model, params, reqs, max_len=48)
+        state = {"killed": False}
+
+        def kill_once(router, rid, chunk):
+            if state["killed"] or "error" in chunk:
+                return
+            fl = router._flights.get(rid)
+            if fl and fl.worker is not None and fl.forwarded >= 3 and not chunk["done"]:
+                state["killed"] = True
+                router.kill_worker(fl.worker)
+
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=2,
+                        max_len=48, stream_interval=1,
+                        on_forward=kill_once, launch_timeout=420)
+        assert state["killed"]
+        for rid in ref:
+            deltas = [t for c in out.chunks if c["id"] == rid and "error" not in c
+                      for t in c["delta"]]
+            assert deltas == ref[rid], rid
+
+    def test_all_workers_down_refuses_instead_of_hanging(self, bundle):
+        """Acceptance: with every worker dead the router settles the
+        remaining requests with error replies (and returns) — it must not
+        hang."""
+        cfg, model, params = bundle
+        reqs = _workload(cfg, 3, steps=(12, 16), prompts=(3, 6), seed=7)
+        state = {"killed": False}
+
+        def kill_the_only_worker(router, rid, chunk):
+            if not state["killed"] and "error" not in chunk:
+                state["killed"] = True
+                router.kill_worker(0)
+
+        out = run_fleet(model, params, reqs, n_workers=1, max_batch=2,
+                        max_len=32, stream_interval=1,
+                        on_forward=kill_the_only_worker, launch_timeout=420)
+        assert state["killed"]
+        errored = [rid for rid, r in out.results.items() if "error" in r]
+        assert errored, "refusal must surface as error replies"
+        for rid in errored:
+            assert "no live workers" in out.results[rid]["error"]
+        # every request settled one way or the other: serve() returned
+        assert set(out.results) == {r.rid for r in reqs}
+
+    def test_respawn_from_template_completes_everything(self, bundle):
+        """Optional respawn path: with cfg.respawn the router replaces the
+        dead worker from the same template and the whole workload still
+        completes token-identically."""
+        cfg, model, params = bundle
+        reqs = _workload(cfg, 3, steps=(14, 18), prompts=(3, 6), seed=8)
+        ref = _reference_tokens(model, params, reqs, max_len=48)
+        state = {"killed": False}
+
+        def kill_once(router, rid, chunk):
+            if state["killed"] or "error" in chunk:
+                return
+            fl = router._flights.get(rid)
+            if fl and fl.worker is not None and fl.forwarded >= 2:
+                state["killed"] = True
+                router.kill_worker(fl.worker)
+
+        out = run_fleet(model, params, reqs, n_workers=1, max_batch=2,
+                        max_len=48, stream_interval=1, respawn=True,
+                        on_forward=kill_once, launch_timeout=420)
+        assert state["killed"]
+        assert out.stats["workers_spawned"] == 2  # original + replacement
+        for rid, expect in ref.items():
+            assert out.results[rid]["tokens"] == expect, rid
+        assert set(out.stats["restarted"]), "kill mid-flight must requeue"
+
+
+class TestFleetConfigPlumbing:
+    def test_cfg_object_with_overrides(self, bundle):
+        cfg, model, params = bundle
+        base = FleetConfig(n_workers=1, max_batch=2, max_len=32)
+        reqs = _workload(cfg, 2, steps=(3, 5), seed=9)
+        out = run_fleet(model, params, reqs, cfg=base, n_workers=2,
+                        launch_timeout=240)
+        assert out.stats["workers_spawned"] == 2
+        assert len(out.results) == 2

@@ -1,13 +1,21 @@
-"""Frontends (paper §4.3): Channels (SPSC + MPSC locking/non-locking),
-DataObject (publish/getHandle/get), RPC, Tasking — all built exclusively on
-the HiCR core API, exercised here over the localsim fabric."""
+"""Frontends (paper §4.3): Channels (SPSC + MPSC locking/non-locking,
+collective and direct construction, seeded ring properties), DataObject
+(publish/getHandle/get), RPC, Tasking — all built exclusively on the HiCR
+core API, exercised here over the localsim fabric."""
+import itertools
 import threading
 
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback: seeded-random strategies, tests still run
+    from _hypothesis_compat import given, settings, st
+
 from repro.backends import coroutine, hostcpu
 from repro.backends.localsim import LocalSimWorld
+from repro.core.definitions import FutureTimeoutError
 from repro.frontends.channels import (
     ChannelMessageTooLargeError,
     MPSCLockingConsumer,
@@ -265,6 +273,160 @@ class TestNonblockingIntrospection:
         assert results[0] == "raised"
         assert results[1] == b"z" * 8
         w.shutdown()
+
+
+#: fresh exchange tags so every (property) example gets its own ring
+_TAGS = itertools.count(50_000)
+
+
+@pytest.fixture(scope="module")
+def direct_world():
+    w = LocalSimWorld(1)
+    yield w
+    w.shutdown()
+
+
+@pytest.fixture(scope="module")
+def direct_mgrs(direct_world):
+    return direct_world.managers_for(0)
+
+
+class TestDirectChannels:
+    """`connect_direct`: non-collective channel construction over directly
+    registered slots — what lets an elastically created fleet worker attach
+    to the router without joining launch-time collectives."""
+
+    def test_direct_pair_roundtrip_single_instance(self, direct_mgrs):
+        cm, mm = direct_mgrs.communication_manager, direct_mgrs.memory_manager
+        tag = next(_TAGS)
+        cons = SPSCConsumer.connect_direct(cm, mm, tag=tag, capacity=4, msg_size=8)
+        prod = SPSCProducer.connect_direct(cm, mm, tag=tag, capacity=4, msg_size=8)
+        for i in range(10):  # wraps the 4-deep ring twice
+            assert prod.try_push(i.to_bytes(8, "little"))
+            assert int.from_bytes(cons.pop(timeout=10), "little") == i
+
+    def test_direct_producer_rendezvous_across_instances(self):
+        """The producer may connect BEFORE the consumer exists: the bounded
+        rendezvous retry resolves once registration lands, regardless of
+        thread interleaving."""
+
+        def prog(mgrs, rank):
+            cm, mm = mgrs.communication_manager, mgrs.memory_manager
+            if rank == 0:
+                prod = SPSCProducer.connect_direct(cm, mm, tag=91000, capacity=2,
+                                                   msg_size=8, timeout=30.0)
+                prod.push(b"direct!!")
+                return "sent"
+            cons = SPSCConsumer.connect_direct(cm, mm, tag=91000, capacity=2, msg_size=8)
+            return cons.pop(timeout=30)
+
+        w = LocalSimWorld(2)
+        results = w.launch(prog)
+        assert results[1] == b"direct!!"
+        w.shutdown()
+
+    def test_direct_connect_times_out_without_peer(self, direct_mgrs):
+        cm, mm = direct_mgrs.communication_manager, direct_mgrs.memory_manager
+        with pytest.raises(FutureTimeoutError, match="did not register"):
+            SPSCProducer.connect_direct(cm, mm, tag=next(_TAGS), capacity=2,
+                                        msg_size=8, timeout=0.05)
+
+    def test_direct_consumer_duplicate_tag_rejected(self, direct_mgrs):
+        from repro.core.definitions import HiCRError
+
+        cm, mm = direct_mgrs.communication_manager, direct_mgrs.memory_manager
+        tag = next(_TAGS)
+        SPSCConsumer.connect_direct(cm, mm, tag=tag, capacity=2, msg_size=8)
+        with pytest.raises(HiCRError, match="already registered"):
+            SPSCConsumer.connect_direct(cm, mm, tag=tag, capacity=2, msg_size=8)
+
+
+class TestChannelRingProperties:
+    """Seeded ring-buffer properties of the channels frontend (these run with
+    or without hypothesis — the fallback shim draws deterministic examples).
+
+    The ring invariants under test are the paper's §4.3 channel semantics:
+    fixed-size slots, FIFO order across wraparound, tail-head depth
+    accounting, try_push backpressure exactly at capacity."""
+
+    def _pair(self, mgrs, capacity, msg_size=8):
+        cm, mm = mgrs.communication_manager, mgrs.memory_manager
+        tag = next(_TAGS)
+        cons = SPSCConsumer.connect_direct(cm, mm, tag=tag, capacity=capacity,
+                                           msg_size=msg_size)
+        prod = SPSCProducer.connect_direct(cm, mm, tag=tag, capacity=capacity,
+                                           msg_size=msg_size)
+        return prod, cons
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        capacity=st.sampled_from([1, 2, 3, 4, 8]),
+        n=st.integers(1, 24),
+        seed=st.integers(0, 2**16),
+    )
+    def test_fifo_order_under_random_schedule(self, direct_mgrs, capacity, n, seed):
+        """Any interleaving of pushes and pops preserves total FIFO order."""
+        rng = np.random.default_rng(seed)
+        prod, cons = self._pair(direct_mgrs, capacity)
+        sent = popped = 0
+        got = []
+        while popped < n:
+            if sent < n and (sent - popped == 0 or rng.random() < 0.5):
+                if prod.try_push(sent.to_bytes(8, "little")):
+                    sent += 1
+                continue
+            data = cons.try_pop()
+            if data is not None:
+                got.append(int.from_bytes(data, "little"))
+                popped += 1
+        assert got == list(range(n))
+
+    @settings(max_examples=10, deadline=None)
+    @given(capacity=st.sampled_from([1, 2, 4]), rounds=st.integers(1, 5))
+    def test_backpressure_exactly_at_capacity(self, direct_mgrs, capacity, rounds):
+        """try_push accepts exactly `capacity` unconsumed messages, refuses
+        the next, and recovers after a pop — every round (wraparound)."""
+        prod, cons = self._pair(direct_mgrs, capacity)
+        for _ in range(rounds):
+            for i in range(capacity):
+                assert prod.try_push(bytes([i]) * 8)
+            assert not prod.try_push(b"x" * 8)  # full: refused
+            assert cons.try_pop() is not None
+            assert prod.try_push(b"y" * 8)  # freed one slot: accepted
+            for _ in range(capacity):
+                assert cons.try_pop() is not None
+            assert cons.try_pop() is None  # drained
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        capacity=st.sampled_from([2, 4, 8]),
+        n=st.integers(1, 20),
+        seed=st.integers(0, 2**16),
+    )
+    def test_depth_equals_pushed_minus_popped(self, direct_mgrs, capacity, n, seed):
+        """Both ends' depth() equal (pushed - popped) at every step of a
+        random schedule."""
+        rng = np.random.default_rng(seed)
+        prod, cons = self._pair(direct_mgrs, capacity)
+        sent = popped = 0
+        for _ in range(3 * n):
+            if rng.random() < 0.5 and sent - popped < capacity:
+                assert prod.try_push(sent.to_bytes(8, "little"))
+                sent += 1
+            elif sent > popped:
+                assert cons.try_pop() is not None
+                popped += 1
+            assert cons.depth() == sent - popped
+            assert prod.depth() == sent - popped
+
+    @settings(max_examples=10, deadline=None)
+    @given(extra=st.integers(1, 64), msg_size=st.sampled_from([4, 8, 16]))
+    def test_oversize_always_rejected_exact_fit_accepted(self, direct_mgrs, extra, msg_size):
+        prod, cons = self._pair(direct_mgrs, 2, msg_size=msg_size)
+        with pytest.raises(ChannelMessageTooLargeError):
+            prod.try_push(b"z" * (msg_size + extra))
+        assert prod.try_push(b"f" * msg_size)  # exact fit is legal
+        assert cons.try_pop() == b"f" * msg_size
 
 
 # ---------------------------------------------------------------------------

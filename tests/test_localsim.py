@@ -223,6 +223,35 @@ def test_elastic_rejects_unsatisfiable_template():
     w.shutdown()
 
 
+def test_relaunch_after_handled_elastic_failure():
+    """A second launch() must not re-raise elastic worker errors the caller
+    already handled (the fleet-requeue pattern): per-launch verdicts only
+    cover that launch's own runs."""
+    from repro.core.definitions import InstanceFailedError
+
+    def crashing_worker(mgrs, rank):
+        raise ValueError("elastic worker crash (handled by caller)")
+
+    w = LocalSimWorld(1, entry_fn=crashing_worker)
+
+    def prog(mgrs, rank):
+        im = mgrs.instance_manager
+        im.create_instances(1, im.create_instance_template())
+        return "root-ok"
+
+    assert w.launch(prog)[0] == "root-ok"
+    w.wait_instance(1)  # the elastic worker has crashed (handled here)
+    assert 1 in w.instance_errors()
+    # second launch over the same world: its own ranks all succeed, so it
+    # must return normally instead of re-raising the handled crash
+    try:
+        results = w.launch(lambda mgrs, rank: f"again-{rank}")
+    except InstanceFailedError as e:  # pragma: no cover - the regression
+        raise AssertionError(f"stale handled error re-raised: {e}")
+    assert results[0] == "again-0"
+    w.shutdown()
+
+
 def test_message_path_for_rpc():
     def prog(mgrs, rank):
         im = mgrs.instance_manager

@@ -34,9 +34,9 @@ class TestRegistry:
             registry.build("no-such-backend", "compute")
 
     def test_unimplemented_role_raises(self):
-        # hostcpu is single-instance: no instance role (paper Table 1)
+        # coroutine is compute-only (paper Table 1)
         with pytest.raises(KeyError, match="does not implement role"):
-            registry.build("hostcpu", "instance")
+            registry.build("coroutine", "instance")
 
     def test_register_rejects_invalid_role(self):
         with pytest.raises(ValueError, match="unknown manager role"):
@@ -46,7 +46,7 @@ class TestRegistry:
         table = registry.capability_table()
         assert set(table["hostcpu"]) == set(registry.ROLES)
         assert table["hostcpu"]["compute"] is True
-        assert table["hostcpu"]["instance"] is False
+        assert table["hostcpu"]["instance"] is True  # single-instance view
         assert table["localsim"]["instance"] is True
         assert table["localsim"]["compute"] is False
         assert table["tpu_spec"]["topology"] is True
@@ -96,3 +96,43 @@ class TestRuntime:
         # localsim factories need a world handle at launch time
         with pytest.raises(RuntimeAssemblyError, match="launch-time context"):
             Runtime("localsim")
+
+
+class TestRuntimeInstanceLifecycle:
+    """Runtime facade over the instance role (paper §3.1.1): the same
+    template → create → terminate surface the fleet router uses, reachable
+    without importing a concrete backend."""
+
+    def test_instances_and_liveness_on_hostcpu(self):
+        rt = Runtime("hostcpu")
+        instances = rt.instances()
+        assert len(instances) == 1 and instances[0].is_root()
+        assert list(rt.live_instances()) == list(instances)
+
+    def test_create_instances_requirements_shorthand(self):
+        from repro.core.definitions import UnsupportedOperationError
+
+        rt = Runtime("hostcpu")
+        # satisfiable requirements reach the capability error (stub path)
+        with pytest.raises(UnsupportedOperationError, match="template validated"):
+            rt.create_instances(1, min_compute_resources=1)
+
+    def test_create_instances_validates_template_first(self):
+        from repro.core.definitions import HiCRError, UnsupportedOperationError
+
+        rt = Runtime("hostcpu")
+        with pytest.raises(HiCRError) as exc:
+            rt.create_instances(1, min_memory_bytes=1 << 62)
+        assert not isinstance(exc.value, UnsupportedOperationError)
+
+    def test_terminate_unsupported_on_hostcpu(self):
+        from repro.core.definitions import UnsupportedOperationError
+
+        rt = Runtime("hostcpu")
+        with pytest.raises(UnsupportedOperationError):
+            rt.terminate_instance(rt.instances()[0])
+
+    def test_backend_without_instance_role_raises_assembly_error(self):
+        rt = Runtime("jaxdev")
+        with pytest.raises(RuntimeAssemblyError, match="no instance role"):
+            rt.instances()
