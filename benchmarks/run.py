@@ -57,13 +57,16 @@ def _median_merge(rows_per_repeat: list[list[dict]]) -> list[dict]:
     return merged
 
 
-def _run_bench(fn, *, smoke: bool, repeats: int, kv_mode: str | None) -> list[dict]:
+def _run_bench(fn, *, smoke: bool, repeats: int, kv_mode: str | None,
+               prefix_cache: bool = False) -> list[dict]:
     kwargs = {}
     accepted = inspect.signature(fn).parameters
     if smoke:
         kwargs["smoke"] = True
     if kv_mode is not None and "kv_mode" in accepted:
         kwargs["kv_mode"] = kv_mode
+    if prefix_cache and "prefix_cache" in accepted:
+        kwargs["prefix_cache"] = True
     if repeats > 1 and "repeats" in accepted:
         # the bench aggregates internally (and runs its own warmup pass)
         return fn(**kwargs, repeats=repeats)
@@ -82,6 +85,9 @@ def main() -> None:
                     "iteration); rows report the field-wise median")
     ap.add_argument("--kv-mode", choices=("dense", "paged", "both"), default=None,
                     help="KV-cache mode(s) for benches that serve (bench_serve)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="add the shared-prompt prefix-cache rows to "
+                    "bench_serve (paged with vs without the radix cache)")
     args = ap.parse_args()
     names = args.names or list(ALL)
     all_rows: list[dict] = []
@@ -89,7 +95,7 @@ def main() -> None:
         print(f"=== bench: {name}{' (smoke)' if args.smoke else ''} ===")
         t0 = time.monotonic()
         rows = _run_bench(ALL[name], smoke=args.smoke, repeats=args.repeats,
-                          kv_mode=args.kv_mode)
+                          kv_mode=args.kv_mode, prefix_cache=args.prefix_cache)
         print(f"=== {name}: {len(rows)} rows in {time.monotonic() - t0:.1f}s ===\n")
         all_rows.extend(rows)
 

@@ -16,6 +16,7 @@ from typing import Any, Callable, Mapping, Optional, Sequence
 
 from .definitions import (
     InvalidMemcpyDirectionError,
+    LifetimeError,
     MemcpyDirection,
     NoRootInstanceError,
     ProcessingUnitStatus,
@@ -120,6 +121,14 @@ class MemorySlotPool:
     block indices lazily against the caller's reservation. `free(blocks)`
     returns physical blocks; `unreserve(n)` returns unclaimed capacity.
 
+    Blocks are reference-counted so several holders can share one physical
+    block (fork-by-reference, the prefix-cache ownership model): `draw` hands
+    a block out with refcount 1, `acquire`/`share` add a holder, and
+    `release`/`free` drop one — the block only returns to the free list when
+    its last holder lets go. Dropping a holder from a block that has none
+    (a double-free) raises `LifetimeError` instead of silently corrupting
+    the free list with a duplicate entry.
+
     `block_slot(backing_idx, block)` describes one block as a registered
     sub-slot (offset view) of a backing slot — the form a communication
     manager can memcpy from/to.
@@ -142,6 +151,8 @@ class MemorySlotPool:
         self._free: list[int] = [i for i in range(n_blocks) if i not in pinned]
         self._capacity = len(self._free)
         self._reserved = 0
+        #: block -> holder count; only allocated blocks have an entry
+        self._refs: dict[int, int] = {}
 
     # -- introspection -------------------------------------------------------
     @property
@@ -187,13 +198,61 @@ class MemorySlotPool:
             raise ValueError("pool out of blocks despite reservation")
         self._reserved -= n
         out, self._free = self._free[:n], self._free[n:]
+        for b in out:
+            self._refs[b] = 1
         return out
 
-    def free(self, blocks: Sequence[int]) -> None:
+    # -- reference counting (shared blocks) ----------------------------------
+    def refcount(self, block: int) -> int:
+        """Current holder count of `block` (0 = free / never drawn)."""
+        return self._refs.get(block, 0)
+
+    def acquire(self, blocks: Sequence[int]) -> None:
+        """Add one holder to each of `blocks` (fork-by-reference). Acquiring
+        a block no one holds is a lifetime bug: the content it guards may
+        already have been reallocated."""
+        for b in blocks:
+            if self._refs.get(b, 0) <= 0:
+                raise LifetimeError(
+                    f"acquire of block {b} which is not allocated"
+                )
+        for b in blocks:
+            self._refs[b] += 1
+
+    # `share` is the paper-facing name for adding a holder to an existing
+    # allocation (fork-by-reference); identical to `acquire`.
+    share = acquire
+
+    def release(self, blocks: Sequence[int]) -> None:
+        """Drop one holder from each of `blocks`; a block whose last holder
+        releases returns to the free list. Releasing an unallocated block
+        (double-free) raises `LifetimeError` — silently re-appending it
+        would hand the same block out twice. Validation runs over the whole
+        list BEFORE any mutation (like `acquire`), so a rejected call
+        leaves the pool exactly as it found it."""
+        drops: dict[int, int] = {}
         for b in blocks:
             if not 0 <= b < self.n_blocks:
                 raise ValueError(f"block {b} out of range [0, {self.n_blocks})")
-        self._free.extend(blocks)
+            drops[b] = drops.get(b, 0) + 1
+        for b, k in drops.items():
+            if self._refs.get(b, 0) < k:
+                raise LifetimeError(
+                    f"double free: block {b} has {self._refs.get(b, 0)} "
+                    f"holder(s), release of {k} requested"
+                )
+        for b, k in drops.items():
+            count = self._refs[b] - k
+            if count == 0:
+                del self._refs[b]
+                self._free.append(b)
+            else:
+                self._refs[b] = count
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Drop one holder per block — with unshared blocks (refcount 1,
+        the pre-refcounting common case) this frees them outright."""
+        self.release(blocks)
 
     # -- HiCR slot views ------------------------------------------------------
     def block_slot(self, backing_idx: int, block: int) -> LocalMemorySlot:

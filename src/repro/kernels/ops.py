@@ -71,14 +71,18 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0, scale=None, impl: st
     return ref.decode_attention(q, k_cache, v_cache, pos, window=window, scale=scale)
 
 
-def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *, scale=None, impl: str = "ref"):
+def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *, window=0, scale=None,
+                           impl: str = "ref"):
     if impl == "pallas":
         from . import paged_decode_attention as pda
 
         return pda.paged_decode_attention(
-            q, k_pool, v_pool, page_table, pos, scale=scale, interpret=_INTERPRET
+            q, k_pool, v_pool, page_table, pos, window=window, scale=scale,
+            interpret=_INTERPRET,
         )
-    return ref.paged_decode_attention(q, k_pool, v_pool, page_table, pos, scale=scale)
+    return ref.paged_decode_attention(
+        q, k_pool, v_pool, page_table, pos, window=window, scale=scale
+    )
 
 
 def gated_linear_scan(q, k, v, log_a, *, chunk: int = 128, initial_state=None, impl: str = "ref"):

@@ -38,6 +38,7 @@ def _kernel(
     scale: float,
     page: int,
     num_pages: int,
+    window: int,
 ):
     b = pl.program_id(0)
     i = pl.program_id(2)
@@ -56,7 +57,12 @@ def _kernel(
     # logical slot index of each entry in this page; invalid slots (past
     # pos, incl. everything behind a padded null-page entry) are masked
     idx = i * page + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], page), 1)
-    s = jnp.where(idx <= pos, s, NEG_INF)
+    valid = idx <= pos
+    if window > 0:
+        # shared (prefix-cache) layouts page sliding-window layers through
+        # the dynamic table; the window is a position mask, not a ring
+        valid = valid & (idx > pos - window)
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev, l_prev = m_scr[...], l_scr[...]
     m_cur = jnp.max(s, axis=1, keepdims=True)
@@ -73,7 +79,7 @@ def _kernel(
         o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
 def paged_decode_attention(
     q,
     k_pool,
@@ -81,12 +87,15 @@ def paged_decode_attention(
     page_table,
     pos,
     *,
+    window: int = 0,
     scale: Optional[float] = None,
     interpret: bool = True,
 ):
     """q: (B, H, hd); k/v_pool: (P, page, KV, hd); page_table: (B, n_pages)
     int32 physical page per logical page; pos: scalar or (B,) last valid
-    logical slot. Returns (B, H, hd).
+    logical slot. `window` > 0 masks logical slots older than
+    ``pos - window`` (sliding-window layers under a shared/prefix layout).
+    Returns (B, H, hd).
 
     The per-KV-head grid dim shares gathered pages across the q-head group
     (GQA); the page grid dim carries the online-softmax state.
@@ -103,7 +112,9 @@ def paged_decode_attention(
     vt = v_pool.transpose(0, 2, 1, 3)
     qg = q.reshape(B, KV, groups, hd)
 
-    kernel = functools.partial(_kernel, scale=scale, page=page, num_pages=n)
+    kernel = functools.partial(
+        _kernel, scale=scale, page=page, num_pages=n, window=int(window or 0)
+    )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

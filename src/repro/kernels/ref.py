@@ -107,6 +107,15 @@ def decode_attention(
     every entry is in-window by construction; validity is slots <= pos.
     Returns (B, H, hd).
     """
+    return _masked_decode(q, k_cache, v_cache, pos, window=0, scale=scale)
+
+
+def _masked_decode(q, k_cache, v_cache, pos, *, window, scale):
+    """Shared single-token GQA decode body: slot-validity masking
+    (slot <= pos), plus an optional position-window mask (slot > pos -
+    window) for dynamically-tabled sliding-window layers. One copy of the
+    scaled-dot-product/softmax/einsum oracle serves both the ring path
+    (window=0 — validity only) and the paged shared-layout path."""
     B, H, hd = q.shape
     _, S, KV, _ = k_cache.shape
     groups = H // KV
@@ -120,6 +129,9 @@ def decode_attention(
 
     slot = jnp.arange(S)[None, :]  # (1,S)
     valid = slot <= pos[:, None]
+    if window is not None and not (isinstance(window, int) and window <= 0):
+        w = jnp.asarray(window)
+        valid = valid & ((w <= 0) | (slot > pos[:, None] - w))
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, vf)
@@ -133,6 +145,7 @@ def paged_decode_attention(
     page_table,
     pos,
     *,
+    window: int = 0,
     scale: Optional[float] = None,
 ):
     """Single-token attention over a paged (block-pool) KV cache.
@@ -140,6 +153,11 @@ def paged_decode_attention(
     q: (B, H, hd); k_pool, v_pool: (P, page, KV, hd) — pages shared by every
     sequence; page_table: (B, n_pages) int32 physical page per logical page;
     pos: scalar or (B,) last valid logical slot.
+
+    `window` > 0 additionally masks logical slots older than
+    ``pos - window`` — sliding-window layers under a *shared* (prefix-cache)
+    layout page every position through the dynamic table instead of a ring,
+    so the window must be enforced by position masking here.
 
     Semantics of record for the Pallas paged kernel: gather each sequence's
     pages into a dense (n_pages*page) view, then run the dense decode oracle
@@ -150,7 +168,7 @@ def paged_decode_attention(
     _, page, KV, hd = k_pool.shape
     k_eff = k_pool[page_table].reshape(B, -1, KV, hd)
     v_eff = v_pool[page_table].reshape(B, -1, KV, hd)
-    return decode_attention(q, k_eff, v_eff, pos, scale=scale)
+    return _masked_decode(q, k_eff, v_eff, pos, window=window, scale=scale)
 
 
 def gated_linear_scan(

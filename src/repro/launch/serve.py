@@ -5,7 +5,8 @@ imports here; fleet mode assembles its localsim world inside serve/router).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --mode continuous --max-batch 8 --requests 16 [--backend jaxdev] \
-        [--kv-mode paged --page-size 16 --sync-interval 8 --pool-pages N]
+        [--kv-mode paged --page-size 16 --sync-interval 8 --pool-pages N] \
+        [--prefix-cache --prefix-share 0.5]
 
     # data-parallel fleet: router + N worker instances (paper §3.1.1)
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
@@ -33,7 +34,7 @@ from repro.core.runtime import Runtime
 from repro.models import build
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler
-from repro.serve.workload import synthetic_requests
+from repro.serve.workload import shared_prefix_requests, synthetic_requests
 from repro.train import checkpoint as ckpt
 
 
@@ -58,6 +59,15 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="physical KV pool pages (default: every slot can "
                     "hold a full-length sequence)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged mode: refcounted radix prefix cache — shared "
+                    "prompt prefixes are forked by page reference and only "
+                    "the uncached tail is prefilled (fleet mode adds "
+                    "prefix-affinity routing)")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="fraction of requests opening with a shared system "
+                    "prompt (the workload prefix caching exists for); 0 "
+                    "keeps the fully-unique synthetic workload")
     ap.add_argument("--max-batch", type=int, default=8, help="scheduler slots (continuous mode)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -75,12 +85,22 @@ def main(argv=None):
 
     prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
     max_len = prefix + args.prompt_len + args.steps
-    requests = synthetic_requests(
-        cfg.vocab_size,
-        args.requests,
-        prompt_range=(max(1, args.prompt_len // 2), args.prompt_len + 1),
-        steps_range=(max(1, args.steps // 2), args.steps + 1),
-    )
+    if args.prefix_share > 0:
+        requests = shared_prefix_requests(
+            cfg.vocab_size,
+            args.requests,
+            prefix_len=max(1, args.prompt_len // 2),
+            prefix_share=args.prefix_share,
+            tail_range=(1, max(2, args.prompt_len // 2 + 1)),
+            steps_range=(max(1, args.steps // 2), args.steps + 1),
+        )
+    else:
+        requests = synthetic_requests(
+            cfg.vocab_size,
+            args.requests,
+            prompt_range=(max(1, args.prompt_len // 2), args.prompt_len + 1),
+            steps_range=(max(1, args.steps // 2), args.steps + 1),
+        )
     total_tokens = sum(r.max_new_tokens for r in requests)
 
     t0 = time.time()
@@ -95,7 +115,7 @@ def main(argv=None):
             max_batch=args.max_batch, max_len=max_len, msg_size=msg_size,
             kv_mode=args.kv_mode, page_size=args.page_size,
             pool_pages=args.pool_pages, sync_interval=args.sync_interval,
-            worker_backend=args.backend,
+            prefix_cache=args.prefix_cache, worker_backend=args.backend,
         )
         for r in requests:
             res = out.results[r.rid]
@@ -106,6 +126,12 @@ def main(argv=None):
         stats = out.stats
         print(f"fleet: {stats['workers_spawned']} workers, per-worker settled "
               f"{stats['per_worker_settled']}, restarted {stats['restarted']}")
+        if args.prefix_cache:
+            for idx, pstats in sorted(stats.get("per_worker_prefix", {}).items()):
+                if pstats:
+                    print(f"  worker {idx} prefix cache: hit_rate="
+                          f"{pstats['hit_rate']:.2f} cached_pages="
+                          f"{pstats['cached_pages']}")
         dt = time.time() - t0
         print(f"served {len(requests)} requests / {total_tokens} tokens in {dt:.2f}s "
               f"({total_tokens / dt:.1f} tok/s, mode=fleet, workers={args.workers}, "
@@ -125,6 +151,7 @@ def main(argv=None):
                 model, params, max_batch=args.max_batch, max_len=max_len, runtime=runtime,
                 kv_mode=args.kv_mode, page_size=args.page_size,
                 pool_pages=args.pool_pages, sync_interval=args.sync_interval,
+                prefix_cache=args.prefix_cache,
             )
             results = sched.serve(requests)
             for r in requests:
@@ -136,6 +163,12 @@ def main(argv=None):
                 prog = sched.active_progress()
                 print(f"kv pool: {prog.pages_used} pages used / "
                       f"{prog.pages_free} free after drain")
+                if prog.prefix is not None:
+                    print(f"prefix cache: hit_rate={prog.prefix['hit_rate']:.2f} "
+                          f"({prog.prefix['hits']}/{prog.prefix['lookups']} requests, "
+                          f"{prog.prefix['hit_tokens']}/{prog.prefix['queried_tokens']}"
+                          f" tokens), {prog.prefix['cached_pages']} cached pages, "
+                          f"{prog.prefix['evictions']} evictions")
     dt = time.time() - t0
     print(f"served {len(requests)} requests / {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s, mode={args.mode}, backend={args.backend})")

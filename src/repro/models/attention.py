@@ -104,6 +104,39 @@ def prefill_attention(
     return proj, (k_cache, v_cache)
 
 
+def tail_prefill_attention(
+    cfg: ArchConfig, p, x, cache: Tuple[jax.Array, jax.Array], offset, *, window: int = 0
+):
+    """Prefill of a sequence *tail* against a cache whose first ``offset``
+    positions are already filled (a shared prefix gathered from pool pages).
+
+    x: (B, S_tail, d) — the uncached tail tokens, living at absolute
+    positions [offset, offset + S_tail); cache: (k, v) each (B, S_buf, KV, hd)
+    full-depth buffers (no ring — prefix sharing pages every layer densely).
+    New K/V is written at the tail's absolute positions — overwriting from
+    the divergence point on, which is what makes a copied boundary page
+    copy-on-WRITE — and the tail attends over the whole cache with causal
+    masking at absolute positions (``q_offset``), so prefix keys are read
+    without being recomputed. `offset` may be traced: one compiled unit
+    serves every matched-prefix length of a given tail length.
+    Returns (out (B, S_tail, d), new_cache).
+    """
+    B, S, d = x.shape
+    offset = jnp.asarray(offset, dtype=jnp.int32)
+    positions = offset + jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, offset, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, offset, 0, 0))
+    # oracle impl always: blocked/flash assume a static q_offset and equal
+    # q/kv lengths; the tail runs once per admission, not in the decode loop
+    out = ops.attention(
+        q, k_cache, v_cache, causal=True, window=window, q_offset=offset, impl="ref"
+    )
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return proj, (k_cache, v_cache)
+
+
 def decode_self_attention(
     cfg: ArchConfig,
     p,
@@ -187,6 +220,15 @@ class PagedLayout:
     ``max_len`` fits under the window the ring never wraps and those layers
     degrade to full-attention paging (``ring`` False), exactly mirroring the
     dense cache's ``S_buf = min(window, max_len)`` rule.
+
+    ``shared`` is the prefix-sharing mode (radix cache): rings are disabled
+    outright and sliding-window layers page exactly like full layers —
+    every position of every layer lives in dynamically-tabled pool pages,
+    so one page table row describes a whole prefix and matched prefixes can
+    be forked by reference. The window is enforced by *masking* in the
+    decode attention instead of by the ring's storage shape (the usual
+    price of prefix caching on sliding-window models: local-layer KV is
+    kept for all positions, not just the last ``window``).
     """
 
     max_slots: int
@@ -197,6 +239,7 @@ class PagedLayout:
     window: int
     ring: bool
     w_pages: int  # ring pages per slot (0 when not ring)
+    shared: bool = False  # prefix-sharing layout: all layers full-paged
 
     @property
     def ring_pages_total(self) -> int:
@@ -220,11 +263,12 @@ def paged_layout(
     max_len: int,
     page_size: int,
     num_pages: Optional[int] = None,
+    shared: bool = False,
 ) -> PagedLayout:
     cache_len = -(-max_len // page_size) * page_size
     n_pages_seq = cache_len // page_size
     w = cfg.sliding_window or 0
-    ring = bool(w) and w <= cache_len
+    ring = bool(w) and w <= cache_len and not shared
     if ring and w % page_size != 0:
         raise ValueError(
             f"page_size {page_size} must divide sliding_window {w} "
@@ -243,6 +287,7 @@ def paged_layout(
         window=w,
         ring=ring,
         w_pages=(w // page_size) if ring else 0,
+        shared=shared,
     )
 
 
@@ -265,6 +310,7 @@ def paged_decode_self_attention(
     *,
     page_size: int,
     window: int = 0,
+    ring: bool = True,
 ):
     """One-token decode step against a paged KV pool, natively batched.
 
@@ -274,21 +320,28 @@ def paged_decode_self_attention(
     their K/V writes routed to the null page (full layers) or clamped into
     their own ring pages, so they can never corrupt a live slot's cache.
 
-    `window` > 0 selects ring semantics: writes wrap at ``pos % window`` and
-    validity saturates at the full ring. Returns (out (B,1,d), (pool_k, pool_v)).
+    `window` > 0 with ``ring`` (the default) selects ring semantics: writes
+    wrap at ``pos % window`` and validity saturates at the full ring.
+    `window` > 0 with ``ring=False`` is the prefix-sharing mode: writes go
+    straight through the dynamic table (one slot per position, like full
+    layers) and the window is enforced by *masking* logical slots older
+    than ``pos - window`` inside the attention — same attended set as the
+    ring, but positions stay addressable so prefixes can be shared.
+    Returns (out (B,1,d), (pool_k, pool_v)).
     """
     B = x.shape[0]
     positions = pos[:, None]  # (B, 1) — RoPE at each slot's own position
     q, k, v = _project_qkv(cfg, p, x, positions)  # (B,1,H,hd)/(B,1,KV,hd)
 
-    cache_pos = (pos % window) if window else pos
+    is_ring = bool(window) and ring
+    cache_pos = (pos % window) if is_ring else pos
     cache_pos = jnp.where(active, cache_pos, 0)
     page_idx = cache_pos // page_size
     offset = cache_pos % page_size
     phys = jnp.take_along_axis(table, page_idx[:, None], axis=1)[:, 0]
-    if not window:
-        # full layers: inactive slots write the null page (their table rows
-        # may reference pages since freed and reallocated)
+    if not is_ring:
+        # dynamic-table layers: inactive slots write the null page (their
+        # table rows may reference pages since freed and reallocated)
         phys = jnp.where(active, phys, 0)
     pool_k = pool_k.at[phys, offset].set(k[:, 0].astype(pool_k.dtype))
     pool_v = pool_v.at[phys, offset].set(v[:, 0].astype(pool_v.dtype))
@@ -297,6 +350,9 @@ def paged_decode_self_attention(
     S_eff = table.shape[1] * page_size
     eff_pos = jnp.minimum(pos, S_eff - 1)
     impl = "pallas" if cfg.use_pallas else "ref"
-    out = ops.paged_decode_attention(q[:, 0], pool_k, pool_v, table, eff_pos, impl=impl)
+    out = ops.paged_decode_attention(
+        q[:, 0], pool_k, pool_v, table, eff_pos,
+        window=0 if is_ring else window, impl=impl,
+    )
     proj = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
     return proj[:, None, :], (pool_k, pool_v)

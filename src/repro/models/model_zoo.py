@@ -36,12 +36,17 @@ class PagedOps:
         scatter one slot's B=1 dense prefill cache into its pages
     decode_step(layout, params, pools, full_table, tokens, pos, active)
         -> (logits (B,V), pools): one batched decode tick over the pool
+    prefix_prefill(layout, params, pools, row, tokens, off)
+        -> (logits (1,V), dense_caches): prefill only a prompt's uncached
+        tail against a shared prefix gathered from pool pages (requires a
+        `shared` layout; the prefix-cache admission path)
     """
 
     layout: Callable
     init_pools: Callable
     commit_prefill: Callable
     decode_step: Callable
+    prefix_prefill: Callable = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +160,7 @@ def _build_transformer(cfg: ArchConfig) -> ModelBundle:
             init_pools=functools.partial(transformer.init_paged_caches, cfg),
             commit_prefill=functools.partial(transformer.commit_prefill_paged, cfg),
             decode_step=functools.partial(transformer.lm_paged_decode_step, cfg),
+            prefix_prefill=functools.partial(transformer.lm_prefix_prefill, cfg),
         ),
     )
 

@@ -27,6 +27,7 @@ from .attention import (
     paged_layout,
     prefill_attention,
     self_attention,
+    tail_prefill_attention,
 )
 from .common import (
     ParamBuilder,
@@ -342,11 +343,117 @@ def commit_prefill_paged(cfg: ArchConfig, layout: PagedLayout, pools, dense_cach
     return new_pools
 
 
-def _paged_decode_layer(cfg, layout, p_l, h, pool_kv, table, pos, active, *, window):
+def _gather_pages(pool, row, cache_len: int):
+    """(..., P, ps, KV, hd) pool -> (..., 1, cache_len, KV, hd) dense cache
+    holding the pages `row` names, in logical order (null-page padding
+    gathers garbage that sits past every valid position)."""
+    got = jnp.take(pool, row, axis=-4)  # (..., n_pages_seq, ps, KV, hd)
+    flat = got.reshape(got.shape[:-4] + (cache_len,) + got.shape[-2:])
+    return jnp.expand_dims(flat, axis=-4)
+
+
+def gather_paged_caches(cfg: ArchConfig, layout: PagedLayout, pools, row):
+    """Densify one slot's pool pages into full-depth B=1 caches — the read
+    half of copy-on-write (requires a `shared` layout: every layer's pages
+    are addressed by the same dynamic row)."""
+    g = lambda pool: _gather_pages(pool, row, layout.cache_len)
+    if "k" in pools:
+        return {"k": g(pools["k"]), "v": g(pools["v"])}
+    out = {"units": {name: g(leaf) for name, leaf in pools["units"].items()}}
+    if "tail" in pools:
+        out["tail"] = {"k": g(pools["tail"]["k"]), "v": g(pools["tail"]["v"])}
+    return out
+
+
+def _tail_prefill_layer(cfg, p_l, h, cache_kv, off, *, window):
+    attn_in = rms_norm(h, p_l["ln1"], eps=cfg.norm_eps)
+    attn_out, new_cache = tail_prefill_attention(
+        cfg, p_l["attn"], attn_in, cache_kv, off, window=window
+    )
+    h = h + attn_out
+    ffn_in = rms_norm(h, p_l["ln2"], eps=cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_ffn(cfg, p_l["moe"], ffn_in)
+    else:
+        y = ffn(cfg, p_l["ffn"], ffn_in)
+    return h + y, new_cache
+
+
+def lm_prefix_prefill(cfg: ArchConfig, layout: PagedLayout, params, pools, row, tokens, off):
+    """Prefill only a prompt's uncached *tail* against a shared prefix.
+
+    `row`: (n_pages_seq,) gather row — the matched prefix's physical pages
+    (including the boundary page being copy-on-write-forked), 0-padded;
+    `tokens`: (1, S_tail) uncached tail tokens at absolute positions
+    [off, off + S_tail). Gathers the prefix K/V out of pool pages into
+    full-depth dense caches (`shared` layout: local layers too), runs
+    transformer layers over the tail only — the FLOP savings of a prefix
+    hit — and returns (last-position logits (1, V), dense caches) ready for
+    `commit_prefill_paged`. `off` may be traced; compiles per tail length.
+    """
+    caches = gather_paged_caches(cfg, layout, pools, row)
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed(params["embed"], tokens, compute_dtype=cd)
+
+    if "layers" in params:
+        def body(carry, xs):
+            p_l, k, v = xs
+            new_h, (nk, nv) = _tail_prefill_layer(cfg, p_l, carry, (k, v), off, window=0)
+            return new_h, (nk, nv)
+
+        h, (nk, nv) = maybe_scan(cfg, body, h, (params["layers"], caches["k"], caches["v"]))
+        new_caches = {"k": nk, "v": nv}
+    else:
+        g = cfg.global_interval
+
+        def unit_body(carry, xs):
+            p_unit, c = xs
+            hh = carry
+            nk_l, nv_l = [], []
+            for i in range(g - 1):
+                p_l = jax.tree_util.tree_map(lambda x: x[i], p_unit)
+                hh, (nk, nv) = _tail_prefill_layer(
+                    cfg, p_l, hh, (c["k_local"][i], c["v_local"][i]), off,
+                    window=cfg.sliding_window,
+                )
+                nk_l.append(nk)
+                nv_l.append(nv)
+            p_l = jax.tree_util.tree_map(lambda x: x[g - 1], p_unit)
+            hh, (nkg, nvg) = _tail_prefill_layer(
+                cfg, p_l, hh, (c["k_global"], c["v_global"]), off, window=0
+            )
+            new_c = {
+                "k_local": jnp.stack(nk_l), "v_local": jnp.stack(nv_l),
+                "k_global": nkg, "v_global": nvg,
+            }
+            return hh, new_c
+
+        h, new_unit_caches = maybe_scan(cfg, unit_body, h, (params["units"], caches["units"]))
+        new_caches = {"units": new_unit_caches}
+        if "tail" in params:
+            def tail_body(carry, xs):
+                p_l, k, v = xs
+                new_h, (nk, nv) = _tail_prefill_layer(
+                    cfg, p_l, carry, (k, v), off, window=cfg.sliding_window
+                )
+                return new_h, (nk, nv)
+
+            h, (nk, nv) = maybe_scan(
+                cfg, tail_body, h, (params["tail"], caches["tail"]["k"], caches["tail"]["v"])
+            )
+            new_caches["tail"] = {"k": nk, "v": nv}
+
+    h = rms_norm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, 0], tie=cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def _paged_decode_layer(cfg, layout, p_l, h, pool_kv, table, pos, active, *, window,
+                        ring=True):
     attn_in = rms_norm(h, p_l["ln1"], eps=cfg.norm_eps)
     attn_out, new_kv = paged_decode_self_attention(
         cfg, p_l["attn"], attn_in, pool_kv[0], pool_kv[1], table, pos, active,
-        page_size=layout.page_size, window=window,
+        page_size=layout.page_size, window=window, ring=ring,
     )
     h = h + attn_out
     ffn_in = rms_norm(h, p_l["ln2"], eps=cfg.norm_eps)
@@ -368,7 +475,9 @@ def lm_paged_decode_step(cfg: ArchConfig, layout: PagedLayout, params, pools, fu
     h = embed(params["embed"], tokens[:, None], compute_dtype=cd)  # (B,1,d)
     ring_table = layout.ring_table() if layout.ring else None
     local_table = ring_table if layout.ring else full_table
-    local_window = layout.window if layout.ring else 0
+    # shared (prefix-cache) layouts page local layers through the dynamic
+    # table and enforce the window by masking instead of a ring
+    local_window = layout.window if (layout.ring or layout.shared) else 0
 
     if "layers" in params:
         def body(carry, xs):
@@ -391,7 +500,7 @@ def lm_paged_decode_step(cfg: ArchConfig, layout: PagedLayout, params, pools, fu
                 p_l = jax.tree_util.tree_map(lambda x: x[i], p_unit)
                 hh, (nk, nv) = _paged_decode_layer(
                     cfg, layout, p_l, hh, (c["k_local"][i], c["v_local"][i]),
-                    local_table, pos, active, window=local_window,
+                    local_table, pos, active, window=local_window, ring=layout.ring,
                 )
                 nk_l.append(nk)
                 nv_l.append(nv)
@@ -413,7 +522,7 @@ def lm_paged_decode_step(cfg: ArchConfig, layout: PagedLayout, params, pools, fu
                 p_l, k, v = xs
                 new_h, (nk, nv) = _paged_decode_layer(
                     cfg, layout, p_l, carry, (k, v), local_table, pos, active,
-                    window=local_window,
+                    window=local_window, ring=layout.ring,
                 )
                 return new_h, (nk, nv)
 

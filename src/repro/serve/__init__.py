@@ -1,6 +1,16 @@
 """Serving substrate over the model zoo: serial engine (`engine`), batched
 decode core (`batching`: dense SlotDecoder + paged device-resident
-PagedSlotDecoder), KV page pool (`kv_pool`), continuous-batching scheduler
-(`scheduler`), the HiCR-channel front door (`server`), and the
-multi-instance router/worker fleet over InstanceManager (`router`)."""
-from . import batching, engine, kv_pool, router, scheduler, server, workload  # noqa: F401
+PagedSlotDecoder), KV page pool (`kv_pool`), refcounted prefix radix cache
+(`prefix_cache`), continuous-batching scheduler (`scheduler`), the
+HiCR-channel front door (`server`), and the multi-instance router/worker
+fleet over InstanceManager (`router`)."""
+from . import (  # noqa: F401
+    batching,
+    engine,
+    kv_pool,
+    prefix_cache,
+    router,
+    scheduler,
+    server,
+    workload,
+)

@@ -177,6 +177,7 @@ class PagedSlotDecoder:
         pool_pages: Optional[int] = None,
         sync_interval: int = 8,
         runtime: Optional[Runtime] = None,
+        shared_prefix: bool = False,
     ):
         if model.paged_ops is None:
             raise ValueError(
@@ -185,32 +186,41 @@ class PagedSlotDecoder:
             )
         if sync_interval < 1:
             raise ValueError("sync_interval must be >= 1")
+        if shared_prefix and model.paged_ops.prefix_prefill is None:
+            raise ValueError(
+                f"model family {model.cfg.family!r} has no prefix-prefill path; "
+                "disable the prefix cache"
+            )
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.sync_interval = sync_interval
+        self.shared_prefix = shared_prefix
         self.rt = runtime or Runtime("jaxdev")
         po = model.paged_ops
         self.layout = po.layout(
             max_slots=max_slots, max_len=max_len, page_size=page_size,
-            num_pages=pool_pages,
+            num_pages=pool_pages, shared=shared_prefix,
         )
         self.kv = PagedKVPool(self.rt, model, self.layout)
 
         cm = self.rt.compute_manager
         layout = self.layout
-        prefill_fn = model.make_prefill(layout.cache_len)
 
-        def paged_prefill(p, b):
-            # greedy pick fused into the unit: admission transfers one int32,
-            # not a logits row, and dispatches no eager argmax op
-            logits, state = prefill_fn(p, b)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+        self._prefill_unit = None
+        if not shared_prefix:  # shared admissions go through _prefix_unit
+            prefill_fn = model.make_prefill(layout.cache_len)
 
-        self._prefill_unit = cm.create_execution_unit(
-            paged_prefill, name="paged_prefill", jit=True
-        )
+            def paged_prefill(p, b):
+                # greedy pick fused into the unit: admission transfers one
+                # int32, not a logits row, and dispatches no eager argmax op
+                logits, state = prefill_fn(p, b)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+            self._prefill_unit = cm.create_execution_unit(
+                paged_prefill, name="paged_prefill", jit=True
+            )
 
         # per-slot ring rows are static: keep them resident on device so an
         # admission never re-uploads them
@@ -234,6 +244,18 @@ class PagedSlotDecoder:
         self._commit_unit = cm.create_execution_unit(
             commit_and_arm, name="commit_and_arm", jit=True
         )
+
+        self._prefix_unit = None
+        if shared_prefix:
+            def prefix_prefill(p, pools, row, tokens, off):
+                # greedy pick fused, exactly like paged_prefill: one int32
+                # crosses to the host per admission
+                logits, state = po.prefix_prefill(layout, p, pools, row, tokens, off)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+            self._prefix_unit = cm.create_execution_unit(
+                prefix_prefill, name="prefix_prefill", jit=True
+            )
 
         K = sync_interval
 
@@ -292,8 +314,29 @@ class PagedSlotDecoder:
     def prefill(self, prompt: Sequence[int]):
         """B=1 dense prefill with page-aligned cache headroom. Returns
         (first greedy token, dense decoder state to commit into pages)."""
+        if self.shared_prefix:
+            # the dense prefill shapes ring-local caches; a shared layout
+            # commits full-depth caches — admissions must gather-prefill
+            raise RuntimeError("shared-prefix decoder: use prefill_prefix()")
         tokens = jnp.asarray(np.asarray(prompt, dtype=np.int32)[None, :])
         first, state = self.rt.run(self._prefill_unit, self.params, {"tokens": tokens})
+        return int(np.asarray(first)[0]), state
+
+    def prefill_prefix(self, tail: Sequence[int], gather_row: np.ndarray, offset: int):
+        """Prefill only the uncached `tail` of a prompt against the shared
+        prefix whose pages `gather_row` names (null-padded); `offset` is the
+        matched prefix length in tokens (0 on a cache miss — the whole
+        prompt is the tail). Returns (first greedy token, full-depth dense
+        state ready to commit into pages). Compiles once per tail length;
+        `offset` is traced, so match depth never recompiles."""
+        if self._prefix_unit is None:
+            raise RuntimeError("decoder was built without shared_prefix=True")
+        tokens = jnp.asarray(np.asarray(tail, dtype=np.int32)[None, :])
+        first, state = self.rt.run(
+            self._prefix_unit, self.params, self.kv.pools,
+            jnp.asarray(np.asarray(gather_row, dtype=np.int32)),
+            tokens, jnp.int32(offset),
+        )
         return int(np.asarray(first)[0]), state
 
     def load(

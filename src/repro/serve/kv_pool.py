@@ -86,16 +86,36 @@ class PagedKVPool:
         return self.accounting.draw(n_pages)
 
     def free(self, pages: Sequence[int], *, unreserve: int = 0) -> None:
-        """Return a finished slot's physical pages and release whatever part
-        of its reservation was never drawn."""
+        """Drop one holder per page (a finished slot returning its pages)
+        and release whatever part of its reservation was never drawn."""
         self.accounting.free(pages)
         if unreserve:
             self.accounting.unreserve(unreserve)
+
+    # -- shared pages (prefix cache: fork-by-reference) -----------------------
+    def acquire(self, pages: Sequence[int]) -> None:
+        """Add one holder to each page (share an existing allocation)."""
+        self.accounting.acquire(pages)
+
+    # paper-facing alias: fork a page table entry by reference
+    share = acquire
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one holder per page; last holder frees the page."""
+        self.accounting.release(pages)
+
+    def refcount(self, page: int) -> int:
+        return self.accounting.refcount(page)
 
     # -- introspection --------------------------------------------------------
     @property
     def pages_free(self) -> int:
         return self.accounting.blocks_free
+
+    @property
+    def pages_available(self) -> int:
+        """Free pages not spoken for by an outstanding reservation."""
+        return self.accounting.blocks_available
 
     @property
     def pages_used(self) -> int:

@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import zlib
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -55,6 +56,9 @@ TAG_REQ = 1000
 TAG_REPLY = 2000
 TAG_CTL = 3000
 
+#: sticky-home affinity map bound (distinct prompt heads remembered)
+_HOME_CAP = 4096
+
 
 @dataclasses.dataclass
 class FleetConfig:
@@ -72,6 +76,10 @@ class FleetConfig:
     page_size: int = 16
     sync_interval: int = 4
     pool_pages: Optional[int] = None
+    #: per-worker refcounted radix prefix cache (paged mode only); also
+    #: switches the router to prefix-affinity admission — requests whose
+    #: prompts share a head keep landing on the worker whose cache is warm
+    prefix_cache: bool = False
     worker_backend: str = "jaxdev"
     #: replace a dead worker with a fresh instance from the same template
     respawn: bool = False
@@ -79,6 +87,16 @@ class FleetConfig:
     #: synchronization point (kill observation is state-based, per tick)
     idle_wait: float = 0.02
     connect_timeout: float = 120.0
+
+    def __post_init__(self):
+        # fail HERE, not inside every spawned worker thread: a bad combo
+        # would otherwise surface only as "no live workers in the fleet"
+        # with the real ValueError buried in stats["worker_errors"]
+        if self.prefix_cache and self.kv_mode != "paged":
+            raise ValueError(
+                "prefix_cache requires kv_mode='paged' (prefixes are shared "
+                "as pool pages; dense slots own private caches)"
+            )
 
 
 def make_worker_entry(model, params, cfg: FleetConfig) -> Callable:
@@ -112,6 +130,7 @@ def make_worker_entry(model, params, cfg: FleetConfig) -> Callable:
                 model, params, max_batch=cfg.max_batch, max_len=cfg.max_len,
                 runtime=rt, kv_mode=cfg.kv_mode, page_size=cfg.page_size,
                 pool_pages=cfg.pool_pages, sync_interval=cfg.sync_interval,
+                prefix_cache=cfg.prefix_cache,
             )
             server = ChannelServer(
                 sched, req, reply, msg_size=cfg.msg_size,
@@ -126,6 +145,7 @@ def make_worker_entry(model, params, cfg: FleetConfig) -> Callable:
                     "pages_free": prog.pages_free,
                     "active": sched.active_count,
                     "settled": server.settled,
+                    "prefix": prog.prefix,
                 }
                 # heartbeat: best-effort — a full control ring just means the
                 # router has fresher reports than it has drained
@@ -159,6 +179,10 @@ class _Flight:
     attempt_tokens: int = 0       # tokens received in the CURRENT attempt
     restarted: bool = False
     done: bool = False
+    #: crc32 of the prompt's head page, computed once at submission — the
+    #: sticky-home affinity key (the admission scan runs in the router's
+    #: polling hot loop, so the key is never recomputed there)
+    head_crc: int = 0
 
 
 @dataclasses.dataclass
@@ -175,6 +199,7 @@ class _WorkerHandle:
     reported: bool = False
     free_slots: int = 0
     pages_free: Optional[int] = None
+    prefix: Optional[dict] = None  # last reported radix-cache counters
     assigned_since_report: int = 0
     settled: int = 0
     inflight: Dict[str, Request] = dataclasses.field(default_factory=dict)
@@ -202,6 +227,12 @@ class FleetRouter:
         self.on_forward = on_forward
         self.workers: List[_WorkerHandle] = []
         self._flights: Dict[str, _Flight] = {}
+        #: prefix-affinity sticky homes: head crc -> worker idx that first
+        #: admitted a request with that head (where its cache is warm).
+        #: Bounded: oldest stickiness is dropped past _HOME_CAP entries (a
+        #: long-forgotten head's pages are LRU-evicted worker-side anyway,
+        #: so re-homing it costs nothing but the re-prefill a miss pays)
+        self._home: Dict[int, int] = {}
         self._backlog: deque = deque()
         self._done = 0
         self._spawned = 0
@@ -334,6 +365,7 @@ class FleetRouter:
             body = json.loads(bytes(raw).rstrip(b"\0").decode())
             h.free_slots = int(body.get("free_slots", 0))
             h.pages_free = body.get("pages_free")
+            h.prefix = body.get("prefix")
             h.reported = True
             h.assigned_since_report = 0
 
@@ -368,7 +400,15 @@ class FleetRouter:
         h.inflight.clear()
 
     # -- admission -------------------------------------------------------------
-    def _pick_worker(self) -> Optional[_WorkerHandle]:
+    def _head_crc(self, request: Request) -> int:
+        head = ",".join(str(t) for t in request.prompt[: self.cfg.page_size])
+        return zlib.crc32(head.encode())
+
+    def _request_crc(self, request: Request) -> int:
+        flight = self._flights.get(request.rid)
+        return flight.head_crc if flight is not None else self._head_crc(request)
+
+    def _least_loaded(self) -> Optional[_WorkerHandle]:
         best = None
         for h in self.workers:
             if not h.alive or not h.reported or h.capacity_score() <= 0:
@@ -376,6 +416,28 @@ class FleetRouter:
             if best is None or h.capacity_score() > best.capacity_score():
                 best = h
         return best
+
+    def _pick_worker(self, request: Optional[Request] = None) -> Optional[_WorkerHandle]:
+        if request is not None and self.cfg.prefix_cache:
+            # sticky-home affinity: a head seen before goes back to the
+            # worker that first served it — the one whose radix cache
+            # actually holds it. When that home is merely at capacity we
+            # WAIT (spilling would re-prefill the whole prefix cold); a
+            # dead home drops its stickiness and the head re-homes. A
+            # never-seen head has no cache to protect anywhere, so it
+            # load-balances like plain mode — unique traffic keeps the
+            # whole fleet busy (the home is recorded at admission).
+            crc = self._request_crc(request)
+            idx = self._home.get(crc)
+            if idx is not None:
+                h = self.workers[idx]
+                if h.alive:
+                    if h.reported and h.capacity_score() > 0:
+                        return h
+                    return None  # warm home busy/unreported: wait
+                del self._home[crc]  # home died: re-home below
+            return self._least_loaded()
+        return self._least_loaded()
 
     def _admit(self) -> None:
         while self._backlog:
@@ -385,30 +447,58 @@ class FleetRouter:
                     r = self._backlog.popleft()
                     self._settle_error(r.rid, "no live workers in the fleet")
                 return
-            h = self._pick_worker()
-            if h is None:
-                return  # every live worker is at capacity: wait for reports
-            r = self._backlog[0]
-            wire = json.dumps(to_wire(r)).encode().ljust(self.cfg.msg_size, b"\0")
-            try:
-                pushed = h.req.try_push(wire)
-            except ChannelMessageTooLargeError as e:
-                # one unservable request must not take the fleet down:
-                # settle IT with an error reply and keep admitting the rest
-                self._backlog.popleft()
-                self._settle_error(r.rid, f"request exceeds fleet msg_size: {e}")
-                continue
-            if not pushed:
-                # ring full despite reported capacity (stale report): treat
-                # as no headroom until the next report refreshes it
-                h.assigned_since_report = h.free_slots
-                continue
-            self._backlog.popleft()
-            h.inflight[r.rid] = r
-            h.assigned_since_report += 1
-            flight = self._flights[r.rid]
-            flight.worker = h.idx
-            flight.attempt_tokens = 0
+            # prefix-affinity mode scans PAST head-of-line requests whose
+            # designated worker is busy: a different head may be admissible
+            # on an idle worker right now. Same-head order is still FIFO —
+            # requests of one head share a designated worker, so an
+            # unadmissible head blocks only its own successors.
+            if self.cfg.prefix_cache:
+                candidates = list(self._backlog)
+            else:
+                candidates = [self._backlog[0]]
+            progress = False
+            settled = set()  # ids leaving the backlog this scan (one rebuild)
+            for r in candidates:
+                h = self._pick_worker(r)
+                if h is None:
+                    continue  # this head waits; try the next request
+                wire = json.dumps(to_wire(r)).encode().ljust(self.cfg.msg_size, b"\0")
+                try:
+                    pushed = h.req.try_push(wire)
+                except ChannelMessageTooLargeError as e:
+                    # one unservable request must not take the fleet down:
+                    # settle IT with an error reply and keep admitting the rest
+                    settled.add(r.rid)
+                    self._settle_error(r.rid, f"request exceeds fleet msg_size: {e}")
+                    progress = True
+                    continue
+                if not pushed:
+                    # ring full despite reported capacity (stale report):
+                    # treat as no headroom until the next report refreshes
+                    # it, and re-run the scan against the updated scores
+                    h.assigned_since_report = h.free_slots
+                    progress = True
+                    continue
+                settled.add(r.rid)
+                h.inflight[r.rid] = r
+                h.assigned_since_report += 1
+                flight = self._flights[r.rid]
+                flight.worker = h.idx
+                flight.attempt_tokens = 0
+                if self.cfg.prefix_cache:
+                    self._home.setdefault(flight.head_crc, h.idx)
+                    while len(self._home) > _HOME_CAP:  # drop oldest homes
+                        self._home.pop(next(iter(self._home)))
+                progress = True
+            if settled:
+                self._backlog = deque(
+                    r for r in self._backlog if r.rid not in settled
+                )
+            if self.cfg.prefix_cache or not progress:
+                # the prefix-mode scan already visited every request, and
+                # admissions only consume capacity — a rescan cannot admit
+                # more; plain mode keeps draining the head until it stalls
+                return
 
     # -- main loop --------------------------------------------------------------
     def serve(self, requests: Sequence[Request], *, timeout: float = 600.0) -> dict:
@@ -417,7 +507,10 @@ class FleetRouter:
         for r in requests:
             if r.rid in self._flights:
                 raise ValueError(f"request id {r.rid!r} already in flight")
-            self._flights[r.rid] = _Flight(request=r)
+            self._flights[r.rid] = _Flight(
+                request=r,
+                head_crc=self._head_crc(r) if self.cfg.prefix_cache else 0,
+            )
             self._backlog.append(r)
         target = self._done + len(requests)
         deadline = time.monotonic() + timeout
@@ -445,6 +538,9 @@ class FleetRouter:
             "workers_killed": self._killed,
             "restarted": restarted,
             "per_worker_settled": {h.idx: h.settled for h in self.workers},
+            # last reported radix-cache counters per worker (None when the
+            # prefix cache is off): the fleet's warm-cache evidence
+            "per_worker_prefix": {h.idx: h.prefix for h in self.workers},
         }
 
 

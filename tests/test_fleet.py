@@ -257,6 +257,82 @@ class TestFaultInjection:
         assert set(out.stats["restarted"]), "kill mid-flight must requeue"
 
 
+class TestPrefixFleet:
+    """Fleet × prefix cache: per-worker radix caches plus sticky-home
+    prefix-affinity routing (a head's first admission load-balances and
+    records its home; repeats return to the worker whose cache holds it) —
+    shared prompts keep landing where the cache is warm, and outputs stay
+    token-identical to the single-instance dense path in every scenario,
+    kills included."""
+
+    def test_affinity_routes_shared_head_to_one_worker(self, bundle):
+        """Three requests with the same prompt head: sticky-home affinity
+        sends every repeat back to the worker that first served the head,
+        even when it is busy (waiting beats a cold re-prefill elsewhere),
+        so with max_batch=1 they serialize there and the later ones HIT the
+        warm radix cache — token-identically to the dense single-instance
+        path."""
+        cfg, model, params = bundle
+        head = [7, 7, 3, 9, 1, 2, 8, 4, 6, 6, 5, 1, 2, 3, 4, 5]  # one page
+        reqs = [
+            Request(rid=f"aff-{i}", prompt=head + [50 + i, 60 + i],
+                    max_new_tokens=4 + i)
+            for i in range(3)
+        ]
+        ref = _reference_tokens(model, params, reqs, max_len=48)
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=1,
+                        max_len=48, kv_mode="paged", page_size=16,
+                        sync_interval=2, prefix_cache=True,
+                        launch_timeout=420)
+        for rid, expect in ref.items():
+            assert out.results[rid]["tokens"] == expect, rid
+        settled = out.stats["per_worker_settled"]
+        assert sorted(settled.values()) == [0, 3], settled
+        warm_idx = max(settled, key=settled.get)
+        prefix_stats = out.stats["per_worker_prefix"][warm_idx]
+        assert prefix_stats is not None and prefix_stats["hits"] >= 1
+
+    def test_prefix_cache_requires_paged_kv_up_front(self, bundle):
+        """Config error surfaces at FleetConfig construction, not as an
+        opaque all-workers-dead outage after spawning."""
+        with pytest.raises(ValueError, match="prefix_cache requires"):
+            FleetConfig(prefix_cache=True)  # default kv_mode is dense
+
+    def test_kill_mid_stream_with_prefix_cache_token_identical(self, bundle):
+        """Acceptance: the fault-injection scenario holds with the prefix
+        cache on — a killed worker's requests requeue onto the survivor
+        (whose radix cache may be cold or warm for them) and still complete
+        byte-identical, with the restarted flag set."""
+        cfg, model, params = bundle
+        head = [9, 8, 7, 6, 5, 4, 3, 2, 1, 2, 3, 4, 5, 6, 7, 8]
+        reqs = [
+            Request(rid=f"kp-{i}", prompt=head + [30 + 7 * i], max_new_tokens=16)
+            for i in range(4)
+        ]
+        ref = _reference_tokens(model, params, reqs, max_len=48)
+        state = {"killed_worker": None, "victim": None}
+
+        def kill_mid_stream(router, rid, chunk):
+            if state["killed_worker"] is not None or "error" in chunk:
+                return
+            fl = router._flights.get(rid)
+            if fl and fl.worker is not None and fl.forwarded >= 2 and not chunk["done"]:
+                state["killed_worker"] = fl.worker
+                state["victim"] = rid
+                router.kill_worker(fl.worker)
+
+        out = run_fleet(model, params, reqs, n_workers=2, max_batch=2,
+                        max_len=48, kv_mode="paged", page_size=16,
+                        sync_interval=2, prefix_cache=True, stream_interval=1,
+                        on_forward=kill_mid_stream, launch_timeout=420)
+        assert state["killed_worker"] is not None, "kill never triggered"
+        restarted = set(out.stats["restarted"])
+        assert state["victim"] in restarted
+        for rid, expect in ref.items():
+            assert out.results[rid]["tokens"] == expect, rid
+            assert out.results[rid]["restarted"] == (rid in restarted)
+
+
 class TestFleetConfigPlumbing:
     def test_cfg_object_with_overrides(self, bundle):
         cfg, model, params = bundle

@@ -77,6 +77,44 @@ class TestPagedKernelParity:
         b = ops.paged_decode_attention(q, kp, vp, tbl, jnp.asarray([9, 9]), impl="pallas")
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
+    def test_windowed_masking_matches_explicit_slice(self):
+        """`window` > 0 (shared/prefix layouts: sliding-window layers paged
+        through the dynamic table) attends exactly the last `window` logical
+        slots up to pos — the same set a ring buffer would hold — in both
+        the oracle and the Pallas kernel."""
+        B, H, KV, hd, page, n, w = 3, 4, 2, 16, 8, 4, 8
+        q, kp, vp, tbl = _pool_case(4, B=B, H=H, KV=KV, hd=hd, page=page,
+                                    n_pages=n, pool_pages=24, dtype=jnp.float32)
+        pos = jnp.asarray([5, 13, 27], jnp.int32)  # warm-up / mid / deep
+        # explicit reference: gather the row densely, slice the window, run
+        # the dense oracle on just those slots
+        k_dense = np.asarray(kp)[np.asarray(tbl)].reshape(B, n * page, KV, hd)
+        v_dense = np.asarray(vp)[np.asarray(tbl)].reshape(B, n * page, KV, hd)
+        want = []
+        for b in range(B):
+            p = int(pos[b])
+            lo = max(0, p - w + 1)
+            ks = jnp.asarray(k_dense[b : b + 1, lo : p + 1])
+            vs = jnp.asarray(v_dense[b : b + 1, lo : p + 1])
+            want.append(np.asarray(ref.decode_attention(q[b : b + 1], ks, vs, p - lo)))
+        want = np.concatenate(want, axis=0)
+        for impl in ("ref", "pallas"):
+            got = np.asarray(
+                ops.paged_decode_attention(q, kp, vp, tbl, pos, window=w, impl=impl)
+            )
+            np.testing.assert_allclose(got, want, atol=1e-5, err_msg=impl)
+
+    def test_window_zero_unchanged(self):
+        """window=0 must be byte-for-byte the pre-existing full-validity
+        path (ring layouts keep passing 0)."""
+        B, H, KV, hd, page, n = 2, 4, 1, 8, 8, 3
+        q, kp, vp, tbl = _pool_case(5, B=B, H=H, KV=KV, hd=hd, page=page,
+                                    n_pages=n, pool_pages=12, dtype=jnp.float32)
+        pos = jnp.asarray([7, 20], jnp.int32)
+        base = np.asarray(ref.paged_decode_attention(q, kp, vp, tbl, pos))
+        got = np.asarray(ref.paged_decode_attention(q, kp, vp, tbl, pos, window=0))
+        np.testing.assert_array_equal(base, got)
+
 
 class TestPagedLayout:
     def test_ring_when_window_fits(self, ):
@@ -96,6 +134,20 @@ class TestPagedLayout:
         cfg = get_config("gemma3-1b", reduced=True)
         lay = paged_layout(cfg, max_slots=2, max_len=12, page_size=4)
         assert not lay.ring and lay.w_pages == 0  # window 16 > cache 12
+
+    def test_shared_layout_disables_ring_keeps_window(self):
+        """Prefix-sharing layouts page every layer through the dynamic
+        table: no ring even when the window fits, but the window value
+        survives for position masking."""
+        from repro.configs import get_config
+
+        cfg = get_config("gemma3-1b", reduced=True)  # sliding_window=16
+        lay = paged_layout(cfg, max_slots=4, max_len=37, page_size=16, shared=True)
+        assert lay.shared and not lay.ring and lay.w_pages == 0
+        assert lay.window == 16
+        # and page_size no longer needs to divide the window (no ring)
+        lay2 = paged_layout(cfg, max_slots=2, max_len=24, page_size=12, shared=True)
+        assert lay2.shared and not lay2.ring
 
     def test_page_size_must_divide_window(self):
         from repro.configs import get_config

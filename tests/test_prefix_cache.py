@@ -1,0 +1,307 @@
+"""Prefix-sharing KV subsystem (serve/prefix_cache.py) invariants.
+
+Pure-python tests against a bare `MemorySlotPool` (the cache only touches
+the refcount surface: acquire/release/refcount), plus seeded property tests
+through tests/_hypothesis_compat.py: random admit/finish/evict schedules
+must never orphan or double-free a page, and every live page's refcount
+must equal its holder count (cache node + active sharers).
+"""
+import random
+
+import pytest
+
+from repro.core.definitions import LifetimeError
+from repro.core.managers import MemorySlotPool
+from repro.serve.prefix_cache import RadixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback: seeded-random strategies, tests still run
+    from _hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# MemorySlotPool refcounts (satellite: double-free raises LifetimeError)
+# ---------------------------------------------------------------------------
+
+
+class TestRefcountedSlotPool:
+    def _drawn(self, pool, n):
+        assert pool.reserve(n)
+        return pool.draw(n)
+
+    def test_double_free_raises_lifetime_error(self):
+        """Regression: freeing an already-free block used to silently append
+        a duplicate to the free list, handing the block out twice later."""
+        pool = MemorySlotPool(64, 4)
+        [b] = self._drawn(pool, 1)
+        pool.free([b])
+        with pytest.raises(LifetimeError, match="double free"):
+            pool.free([b])
+        # the free list was not corrupted: every block is distinct
+        got = self._drawn(pool, 4)
+        assert len(set(got)) == 4
+
+    def test_free_of_never_drawn_block_raises(self):
+        pool = MemorySlotPool(64, 4)
+        with pytest.raises(LifetimeError, match="double free"):
+            pool.free([2])
+
+    def test_acquire_release_refcount_cycle(self):
+        pool = MemorySlotPool(64, 4)
+        [b] = self._drawn(pool, 1)
+        assert pool.refcount(b) == 1
+        pool.acquire([b])
+        pool.share([b])  # paper-facing alias
+        assert pool.refcount(b) == 3
+        pool.release([b])
+        pool.release([b])
+        assert pool.refcount(b) == 1 and pool.blocks_used == 1
+        pool.release([b])  # last holder: block returns to the free list
+        assert pool.refcount(b) == 0 and pool.blocks_used == 0
+
+    def test_acquire_of_free_block_raises(self):
+        pool = MemorySlotPool(64, 4)
+        with pytest.raises(LifetimeError, match="not allocated"):
+            pool.acquire([1])
+
+    def test_shared_block_survives_one_release(self):
+        """A shared block only frees when its LAST holder releases — the
+        core guarantee the radix cache's fork-by-reference rests on."""
+        pool = MemorySlotPool(64, 2)
+        [b] = self._drawn(pool, 1)
+        pool.acquire([b])
+        pool.release([b])
+        assert pool.blocks_free == 1  # still held once
+        got = self._drawn(pool, 1)
+        assert b not in got  # a held block is never re-handed out
+
+
+# ---------------------------------------------------------------------------
+# RadixCache semantics (pure python, page_size=4 token blocks)
+# ---------------------------------------------------------------------------
+
+
+def _serve_miss(cache, pool, tokens):
+    """Simulate one request that misses entirely: draw pages for every full
+    block of `tokens`, then commit (donating them to the cache)."""
+    ps = cache.page_size
+    n = len(tokens) // ps
+    assert pool.reserve(n)
+    pages = pool.draw(n)
+    cache.commit(tokens, pages)
+    return pages
+
+
+class TestRadixCacheSemantics:
+    def test_miss_then_full_page_match(self):
+        pool = MemorySlotPool(1, 16)
+        cache = RadixCache(pool, page_size=4)
+        seq = [1, 2, 3, 4, 5, 6, 7, 8]
+        pages = _serve_miss(cache, pool, seq)
+        assert cache.cached_pages == 2
+        m = cache.match(seq + [9, 9])
+        assert m.matched_len == 8 and [n.page for n in m.nodes] == pages
+        assert m.boundary is None
+
+    def test_boundary_partial_match(self):
+        """A prompt diverging mid-block matches token-level into the
+        boundary node (the copy-on-write source)."""
+        pool = MemorySlotPool(1, 16)
+        cache = RadixCache(pool, page_size=4)
+        _serve_miss(cache, pool, [1, 2, 3, 4, 5, 6, 7, 8])
+        m = cache.match([1, 2, 3, 4, 5, 6, 99, 99])
+        assert m.matched_len == 6  # one full page + 2 tokens into the next
+        assert len(m.nodes) == 1 and m.boundary is not None
+        assert m.boundary.block == (5, 6, 7, 8)
+
+    def test_full_prompt_match_is_clamped(self):
+        """A fully-cached prompt must keep >= 1 uncached token: the last
+        matched page is demoted to a copy-on-write boundary."""
+        pool = MemorySlotPool(1, 16)
+        cache = RadixCache(pool, page_size=4)
+        seq = [1, 2, 3, 4, 5, 6, 7, 8]
+        _serve_miss(cache, pool, seq)
+        m = cache.match(seq)
+        assert m.matched_len == 7
+        assert len(m.nodes) == 1 and m.boundary is not None
+
+    def test_tiny_prompt_never_matches_everything(self):
+        pool = MemorySlotPool(1, 8)
+        cache = RadixCache(pool, page_size=4)
+        _serve_miss(cache, pool, [1, 2, 3, 4])
+        assert cache.match([7]).matched_len == 0
+        m = cache.match([1, 2])
+        assert m.matched_len == 1 and m.boundary is not None
+
+    def test_commit_releases_duplicates(self):
+        """Two identical sequences: the second commit frees its pages (the
+        blocks are already cached) instead of double-caching them."""
+        pool = MemorySlotPool(1, 16)
+        cache = RadixCache(pool, page_size=4)
+        seq = [1, 2, 3, 4, 5, 6, 7, 8]
+        _serve_miss(cache, pool, seq)
+        used_before = pool.blocks_used
+        _serve_miss(cache, pool, seq)  # duplicate content
+        assert pool.blocks_used == used_before
+        assert cache.cached_pages == 2
+
+    def test_shared_page_refcounts_and_commit(self):
+        """Full admission lifecycle: lock raises refcounts, commit drops the
+        request's holders and donates only the genuinely new pages."""
+        pool = MemorySlotPool(1, 16)
+        cache = RadixCache(pool, page_size=4)
+        base = [1, 2, 3, 4, 5, 6, 7, 8]
+        _serve_miss(cache, pool, base)
+        prompt = base + [9, 9]
+        m = cache.match(prompt)
+        cache.lock(m)
+        assert all(pool.refcount(p) == 2 for p in m.shared_pages)
+        # tail prefill done: boundary hold drops (none here: aligned match)
+        cache.unlock_boundary(m)
+        # the request decodes 5 tokens -> written seq has 3 full pages + tail
+        assert pool.reserve(2)
+        drawn = pool.draw(2)  # boundary copy page + growth page
+        written = prompt + [11, 12, 13, 14]  # 12 written positions
+        donated = cache.commit(written, m.shared_pages + drawn)
+        assert donated == 1  # only the third page is new content
+        assert all(pool.refcount(p) == 1 for p in m.shared_pages)
+        assert cache.cached_pages == 3
+        # nothing leaked: used pages == cached pages
+        assert pool.blocks_used == cache.cached_pages
+
+    def test_evict_frees_lru_leaves_only(self):
+        pool = MemorySlotPool(1, 32)
+        cache = RadixCache(pool, page_size=4)
+        _serve_miss(cache, pool, [1, 2, 3, 4, 5, 6, 7, 8])   # chain A (older)
+        _serve_miss(cache, pool, [9, 9, 9, 9])               # chain B (newer)
+        assert cache.cached_pages == 3
+        freed = cache.evict(1)
+        assert freed == 1
+        # the LRU *leaf* went first: chain A's deepest node
+        assert cache.match([1, 2, 3, 4, 9]).matched_len == 4
+        assert cache.cached_pages == 2
+
+    def test_evict_skips_pages_shared_with_active_requests(self):
+        pool = MemorySlotPool(1, 8)
+        cache = RadixCache(pool, page_size=4)
+        _serve_miss(cache, pool, [1, 2, 3, 4])
+        m = cache.match([1, 2, 3, 4, 5])
+        cache.lock(m)  # an active request shares the page
+        assert cache.evict(1) == 0
+        cache.unlock(m)
+        assert cache.evict(1) == 1
+        assert pool.blocks_used == 0
+
+    def test_reset_releases_everything(self):
+        pool = MemorySlotPool(1, 16)
+        cache = RadixCache(pool, page_size=4)
+        _serve_miss(cache, pool, [1, 2, 3, 4, 5, 6, 7, 8])
+        cache.reset()
+        assert cache.cached_pages == 0 and pool.blocks_used == 0
+
+    def test_note_tracks_hit_rate(self):
+        pool = MemorySlotPool(1, 16)
+        cache = RadixCache(pool, page_size=4)
+        _serve_miss(cache, pool, [1, 2, 3, 4])
+        hit = cache.match([1, 2, 3, 4, 5, 6])
+        cache.note(hit, 6)
+        miss = cache.match([7, 7, 7, 7])
+        cache.note(miss, 4)
+        st = cache.stats()
+        assert (st["lookups"], st["hits"]) == (2, 1)
+        assert st["hit_tokens"] == 4 and st["queried_tokens"] == 10
+        assert st["hit_rate"] == 0.4
+
+
+# ---------------------------------------------------------------------------
+# property tests: refcount == holders, no orphans, no double-frees
+# ---------------------------------------------------------------------------
+
+
+def _walk_nodes(cache):
+    stack = list(cache.root.children.values())
+    while stack:
+        n = stack.pop()
+        stack.extend(n.children.values())
+        yield n
+
+
+class TestRadixRefcountProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        n_blocks=st.sampled_from([8, 16, 40]),
+        steps=st.integers(5, 60),
+    )
+    def test_insert_match_evict_never_orphans_or_double_frees(
+        self, seed, n_blocks, steps
+    ):
+        """Random admit/finish/evict schedules over a tiny token alphabet
+        (forcing deep prefix collisions). After every step:
+
+        * refcount(page of node n) == 1 + active requests sharing n
+        * refcount(owned page of request r) == 1
+        * pool.blocks_used == |node pages ∪ active owned pages| (no orphans)
+        * node pages are all distinct (no double-ownership)
+        A double-free anywhere raises LifetimeError and fails the test."""
+        rng = random.Random(seed)
+        ps = 4
+        pool = MemorySlotPool(1, n_blocks)
+        cache = RadixCache(pool, page_size=ps)
+        active = []  # dicts: tokens, shared(list), owned(list)
+
+        def invariants():
+            nodes = list(_walk_nodes(cache))
+            node_pages = [n.page for n in nodes]
+            assert len(set(node_pages)) == len(node_pages)
+            assert cache.cached_pages == len(nodes)
+            sharers = {}
+            owned = set()
+            for req in active:
+                for p in req["shared"]:
+                    sharers[p] = sharers.get(p, 0) + 1
+                owned.update(req["owned"])
+            for n in nodes:
+                assert pool.refcount(n.page) == 1 + sharers.get(n.page, 0), (
+                    f"node page {n.page}: refcount {pool.refcount(n.page)}, "
+                    f"holders {1 + sharers.get(n.page, 0)}"
+                )
+            for p in owned:
+                assert pool.refcount(p) == 1
+            assert pool.blocks_used == len(set(node_pages) | owned)
+
+        for _ in range(steps):
+            op = rng.choice(("admit", "admit", "finish", "evict"))
+            if op == "admit":
+                length = rng.randint(2, 14)
+                toks = [rng.randint(0, 2) for _ in range(length)]
+                m = cache.match(toks)
+                total = -(-length // ps)  # worst case: every block written
+                need = total - len(m.nodes)
+                cache.lock(m)
+                if not pool.reserve(need):
+                    cache.evict(need - pool.blocks_available)
+                    if not pool.reserve(need):
+                        cache.unlock(m)
+                        continue
+                owned = pool.draw(need)
+                cache.unlock_boundary(m)
+                cache.note(m, length)
+                active.append(
+                    {"tokens": toks, "shared": m.shared_pages, "owned": owned}
+                )
+            elif op == "finish" and active:
+                req = active.pop(rng.randrange(len(active)))
+                cache.commit(req["tokens"], req["shared"] + req["owned"])
+            elif op == "evict":
+                cache.evict(rng.randint(1, 3))
+            invariants()
+
+        # drain: finish everything, then a full eviction empties the pool
+        while active:
+            req = active.pop()
+            cache.commit(req["tokens"], req["shared"] + req["owned"])
+            invariants()
+        cache.evict(n_blocks)
+        assert pool.blocks_used == cache.cached_pages == 0

@@ -329,6 +329,175 @@ class TestPagedScheduler:
                                         kv_mode="paged")
 
 
+class TestPrefixCacheScheduler:
+    """prefix_cache=True over the paged scheduler: prefix sharing is a
+    storage/scheduling change only — outputs stay token-identical to the
+    serial engine while shared prompts skip their prefix's prefill."""
+
+    def test_shared_prompt_workload_matches_serial(self, bundle, engine):
+        """Requests sharing a system prompt (and sequential resubmissions
+        that fully hit) reproduce the serial engine's tokens exactly, and
+        eviction accounting balances: after the drain the pool holds
+        exactly the cache's pages."""
+        cfg, model, params = bundle
+        rng = np.random.default_rng(7)
+        system = rng.integers(1, cfg.vocab_size, (20,)).tolist()
+        reqs = []
+        for i in range(6):
+            if i % 2 == 0:
+                prompt = system + rng.integers(1, cfg.vocab_size, (1 + i,)).tolist()
+            else:
+                prompt = rng.integers(1, cfg.vocab_size, (8,)).tolist()
+            reqs.append(Request(rid=f"p{i}", prompt=prompt, max_new_tokens=4 + i))
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=64,
+            kv_mode="paged", page_size=16, sync_interval=3, prefix_cache=True,
+        )
+        # serve sequentially so later shared requests actually hit the cache
+        results = {}
+        for r in reqs:
+            results.update(sched.serve([r]))
+        for r in reqs:
+            serial = engine.generate(
+                np.asarray([r.prompt], dtype=np.int32), steps=r.max_new_tokens
+            ).tokens[0].tolist()
+            assert results[r.rid].tokens == serial, r.rid
+        stats = sched.prefix.stats()
+        assert stats["hits"] >= 2 and stats["hit_tokens"] >= 16
+        assert sched.decoder.kv.pages_used == sched.prefix.cached_pages
+
+    def test_identical_resubmission_is_a_full_hit(self, bundle, engine):
+        """The same request twice: the second admission matches everything
+        but the clamped final token and still emits identical output."""
+        cfg, model, params = bundle
+        prompt = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7, 9, 3, 2, 3]
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=48,
+            kv_mode="paged", page_size=16, sync_interval=2, prefix_cache=True,
+        )
+        first = sched.serve([Request(rid="a", prompt=prompt, max_new_tokens=6)])
+        again = sched.serve([Request(rid="b", prompt=prompt, max_new_tokens=6)])
+        assert again["b"].tokens == first["a"].tokens
+        serial = engine.generate(
+            np.asarray([prompt], dtype=np.int32), steps=6
+        ).tokens[0].tolist()
+        assert first["a"].tokens == serial
+        stats = sched.prefix.stats()
+        assert stats["hits"] == 1
+        # the first serve wrote 23 positions -> exactly one full page was
+        # donated; the resubmission shares those 16 tokens by reference
+        assert stats["hit_tokens"] == 16
+
+    def test_multi_turn_resumption_matches_serial(self, bundle, engine):
+        """Turn 2 resumes turn 1's history (prompt + full reply + followup):
+        nearly all of it forks from the cache, output stays serial-exact."""
+        from repro.serve.workload import multi_turn_requests, resume_prompt
+
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=64,
+            kv_mode="paged", page_size=16, sync_interval=2, prefix_cache=True,
+        )
+        # steps pinned to 9 so turn 1 writes 8 + 9 - 1 = 16 positions —
+        # exactly one full page for turn 2 to fork
+        [[turn1, turn2]] = multi_turn_requests(
+            cfg.vocab_size, 1, 2, first_prompt_range=(8, 9),
+            followup_range=(3, 4), steps_range=(9, 10), seed=4,
+        )
+        r1 = sched.serve([turn1])[turn1.rid]
+        prompt2 = resume_prompt(turn1.prompt, r1.tokens, turn2.prompt)
+        r2 = sched.serve(
+            [Request(rid=turn2.rid, prompt=prompt2,
+                     max_new_tokens=turn2.max_new_tokens)]
+        )[turn2.rid]
+        serial = engine.generate(
+            np.asarray([prompt2], dtype=np.int32), steps=turn2.max_new_tokens
+        ).tokens[0].tolist()
+        assert r2.tokens == serial
+        assert sched.prefix.stats()["hit_tokens"] >= 16
+
+    def test_eviction_under_page_pressure(self, bundle, engine):
+        """A pool too small to retain every finished request's pages evicts
+        LRU cache entries instead of refusing admission; outputs stay exact
+        and no page is ever leaked or double-freed (LifetimeError would
+        surface here)."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=48,
+            kv_mode="paged", page_size=16, pool_pages=6, sync_interval=2,
+            prefix_cache=True,
+        )
+        rng = np.random.default_rng(11)
+        for i in range(5):
+            prompt = rng.integers(1, cfg.vocab_size, (18,)).tolist()
+            [fin] = sched.serve(
+                [Request(rid=f"e{i}", prompt=prompt, max_new_tokens=5)]
+            ).values()
+            serial = engine.generate(
+                np.asarray([prompt], dtype=np.int32), steps=5
+            ).tokens[0].tolist()
+            assert fin.tokens == serial, f"e{i}"
+        assert sched.prefix.stats()["evictions"] >= 1
+        assert sched.decoder.kv.pages_used == sched.prefix.cached_pages
+
+    def test_own_locked_match_cannot_livelock_admission(self, bundle, engine):
+        """Regression: when the ONLY evictable pages are the ones the
+        request's own match just locked (and nothing is in flight to free
+        pages later), admission must demote the match to a miss and evict —
+        not return False forever and livelock serve()."""
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=12,
+            kv_mode="paged", page_size=4, pool_pages=4, sync_interval=2,
+            prefix_cache=True,
+        )
+        a_prompt = [1, 2, 3, 4, 5, 6, 7, 8]
+        sched.serve([Request(rid="a", prompt=a_prompt, max_new_tokens=2)])
+        assert sched.prefix.cached_pages == 2  # the whole pool's capacity - 1
+        # B shares page 1 and reaches 2 tokens into page 2 (boundary): its
+        # lock pins BOTH cached pages; it needs 2 new pages but only 1 is
+        # free — the demote-to-miss path must reclaim the cache and admit
+        b_prompt = a_prompt[:6] + [91, 92]
+        b = Request(rid="b", prompt=b_prompt, max_new_tokens=2)
+        assert sched.try_admit(b) is True
+        results = {}
+        while "b" not in results:
+            for fin in sched.step():
+                results[fin.rid] = fin
+        serial = engine.generate(
+            np.asarray([b_prompt], dtype=np.int32), steps=2
+        ).tokens[0].tolist()
+        assert results["b"].tokens == serial
+
+    def test_progress_surfaces_prefix_stats(self, bundle):
+        cfg, model, params = bundle
+        sched = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=32,
+            kv_mode="paged", page_size=16, sync_interval=2, prefix_cache=True,
+        )
+        sched.serve([Request(rid="s", prompt=[1, 2, 3, 4], max_new_tokens=3)])
+        prog = sched.active_progress()
+        assert prog.prefix is not None
+        assert set(prog.prefix) >= {
+            "lookups", "hits", "hit_rate", "hit_tokens", "queried_tokens",
+            "cached_pages", "evictions",
+        }
+        assert prog.prefix["lookups"] == 1
+        # plain paged mode reports no prefix block
+        plain = ContinuousBatchingScheduler(
+            model, params, max_batch=2, max_len=32, kv_mode="paged",
+            sync_interval=2,
+        )
+        assert plain.active_progress().prefix is None
+
+    def test_prefix_cache_requires_paged_mode(self, bundle):
+        _, model, params = bundle
+        with pytest.raises(ValueError, match="prefix_cache requires"):
+            ContinuousBatchingScheduler(
+                model, params, max_batch=2, max_len=32, prefix_cache=True
+            )
+
+
 class TestChannelServer:
     def test_requests_over_mpsc_channel_continuous(self):
         """Two producer instances stream 2 requests each; one server instance
